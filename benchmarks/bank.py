@@ -1,0 +1,58 @@
+"""Bank benchmark — paper Fig. 3(a) throughput + Fig. 3(b) lease reuse.
+
+Sweeps the locality parameter P for all six algorithm variants and prints
+CSV.  ``--threads 4`` reproduces the appendix (Fig. 5) run.
+"""
+from __future__ import annotations
+
+import argparse
+from typing import Dict, List
+
+from repro.core import ALGORITHMS, BankWorkload, SimConfig, make_cluster
+
+DEFAULT_ALGOS = ["ALC", "FGL", "MG-ALC", "LILAC-TM-ST", "LILAC-TM-LT",
+                 "LILAC-TM-OPT"]
+
+
+def run_point(algo: str, locality: float, threads: int, duration: float,
+              seed: int = 0) -> Dict[str, float]:
+    cfg = SimConfig(duration_ms=duration, warmup_ms=duration * 0.15,
+                    threads_per_node=threads, seed=seed)
+    wl = BankWorkload(n_nodes=cfg.n_nodes, n_items=cfg.n_items,
+                      locality=locality)
+    c = make_cluster(algo, wl, cfg)
+    m = c.run()
+    return {
+        "throughput": c.throughput(),
+        "reuse": m.lease_reuse_rate(),
+        "lease_requests": m.lease_requests,
+        "forwards": m.forwards,
+        "aborts": m.aborts,
+    }
+
+
+def main(argv=None) -> List[Dict]:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--threads", type=int, default=2)
+    ap.add_argument("--duration", type=float, default=1500.0)
+    ap.add_argument("--algos", nargs="*", default=DEFAULT_ALGOS)
+    ap.add_argument("--localities", nargs="*", type=float,
+                    default=[0.0, 0.2, 0.4, 0.6, 0.8, 0.9, 1.0])
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args(argv)
+
+    rows = []
+    print("algo,locality,threads,throughput_txn_s,lease_reuse_rate,"
+          "lease_requests,forwards,aborts")
+    for algo in args.algos:
+        for p in args.localities:
+            r = run_point(algo, p, args.threads, args.duration, args.seed)
+            rows.append({"algo": algo, "locality": p, **r})
+            print(f"{algo},{p},{args.threads},{r['throughput']:.1f},"
+                  f"{r['reuse']:.4f},{r['lease_requests']},{r['forwards']},"
+                  f"{r['aborts']}", flush=True)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

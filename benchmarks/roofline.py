@@ -1,0 +1,65 @@
+"""Roofline report: renders the dry-run JSON cells into the §Roofline table."""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+from pathlib import Path
+from typing import Dict, List
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun"
+
+
+def load_cells(mesh: str = None, tag: str = "") -> List[Dict]:
+    cells = []
+    for f in sorted(glob.glob(str(RESULTS / "*.json"))):
+        d = json.load(open(f))
+        if mesh and d.get("mesh") != mesh:
+            continue
+        if (d.get("tag") or "") != tag:
+            continue
+        cells.append(d)
+    return cells
+
+
+def render(cells: List[Dict]) -> str:
+    out = []
+    hdr = (f"{'arch':<18}{'shape':<13}{'mesh':<11}{'status':<7}"
+           f"{'t_comp':>9}{'t_mem':>9}{'t_coll':>9} {'dominant':<11}"
+           f"{'rf':>6}{'useful':>8}{'fits':>6}")
+    out.append(hdr)
+    out.append("-" * len(hdr))
+    for d in cells:
+        if d["status"] != "OK":
+            reason = d.get("skip_reason", d.get("error", ""))[:46]
+            out.append(f"{d['arch']:<18}{d['shape']:<13}{d['mesh']:<11}"
+                       f"{d['status']:<7}{reason}")
+            continue
+        r = d["roofline"]
+        fits = d.get("memory_estimate", {}).get("fits_16GiB", "?")
+        u = d.get("useful_flops_ratio")
+        out.append(
+            f"{d['arch']:<18}{d['shape']:<13}{d['mesh']:<11}OK     "
+            f"{r['t_compute_s']:>9.4f}{r['t_memory_s']:>9.4f}"
+            f"{r['t_collective_s']:>9.4f} {r['dominant']:<11}"
+            f"{r['compute_fraction']:>6.2f}{(u if u else 0):>8.3f}"
+            f"{str(fits):>6}"
+        )
+    return "\n".join(out)
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="pod16x16")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args(argv)
+    cells = load_cells(args.mesh, args.tag)
+    if not cells:
+        print(f"no dry-run cells found under {RESULTS} "
+              f"(run python -m repro.launch.dryrun first)")
+        return
+    print(render(cells))
+
+
+if __name__ == "__main__":
+    main()

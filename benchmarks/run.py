@@ -1,0 +1,83 @@
+"""Benchmark aggregator: one harness per paper table/figure + roofline.
+
+``python -m benchmarks.run`` runs reduced-duration versions of every
+harness (full parameters via each module's own CLI):
+
+* Fig. 3(a)/(b)  — bank.py          (locality sweep, throughput + reuse)
+* Fig. 3(c)      — overload.py      (overload control)
+* Fig. 4         — tpcc.py          (TPC-C 95/5)
+* Fig. 5         — bank.py --threads 4 (appendix)
+* §Roofline      — roofline.py      (reads results/dryrun)
+* serving layer  — serve_locality.py (framework-level locality)
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    t0 = time.time()
+    from benchmarks import bank, overload, roofline, serve_locality, tpcc
+
+    print("=" * 72)
+    print("== Bank locality sweep (Fig 3a/3b), 2 threads/node")
+    print("=" * 72)
+    bank.main(["--duration", "800", "--localities", "0.0", "0.4", "0.8",
+               "0.9", "1.0"])
+
+    print()
+    print("=" * 72)
+    print("== Bank locality sweep, 4 threads/node (Fig 5 appendix)")
+    print("=" * 72)
+    bank.main(["--duration", "800", "--threads", "4",
+               "--localities", "0.0", "0.8", "1.0",
+               "--algos", "ALC", "FGL", "LILAC-TM-ST", "LILAC-TM-LT"])
+
+    print()
+    print("=" * 72)
+    print("== Overload control (Fig 3c)")
+    print("=" * 72)
+    overload.main(["--duration", "900"])
+
+    print()
+    print("=" * 72)
+    print("== TPC-C 95% Payment / 5% New-Order (Fig 4)")
+    print("=" * 72)
+    tpcc.main(["--duration", "900"])
+
+    print()
+    print("=" * 72)
+    print("== Serving-layer locality (framework integration)")
+    print("=" * 72)
+    serve_locality.main(["--localities", "0.0", "0.9"])
+
+    print()
+    print("=" * 72)
+    print("== Vectorized policy sweep (lax.scan model, vmap over grid)")
+    print("=" * 72)
+    from repro.core import jax_sim
+    import numpy as np
+
+    locs = [0.0, 0.3, 0.6, 0.9, 1.0]
+    print("variant,locality,rel_throughput,lease_reuse")
+    for name, kw in (("ALC~", dict(fine_grained=False)),
+                     ("FGL~", dict(fine_grained=True)),
+                     ("LILAC~", dict(fine_grained=True, migrate=True))):
+        out = jax_sim.locality_sweep(locs, seeds=4, **kw)
+        for i, p in enumerate(locs):
+            print(f"{name},{p},{float(out['throughput'][i]):.4f},"
+                  f"{float(out['reuse'][i]):.3f}")
+
+    print()
+    print("=" * 72)
+    print("== Roofline table (single-pod baselines from results/dryrun)")
+    print("=" * 72)
+    roofline.main(["--mesh", "pod16x16"])
+
+    print()
+    print(f"[benchmarks.run] total wall time {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Assigned-architecture registry: ``--arch <id>`` lookup.
+
+Each module defines ``CONFIG`` (the exact published configuration) and
+``smoke_config()`` (a reduced same-family config for CPU smoke tests).
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict
+
+from repro.models.common import ModelConfig
+
+_MODULES = {
+    "qwen2-vl-2b": "qwen2_vl_2b",
+    "glm4-9b": "glm4_9b",
+    "phi4-mini-3.8b": "phi4_mini_3_8b",
+    "minitron-4b": "minitron_4b",
+    "gemma3-27b": "gemma3_27b",
+    "deepseek-v2-236b": "deepseek_v2_236b",
+    "mixtral-8x7b": "mixtral_8x7b",
+    "hubert-xlarge": "hubert_xlarge",
+    "mamba2-780m": "mamba2_780m",
+    "zamba2-1.2b": "zamba2_1_2b",
+}
+
+ARCH_IDS = tuple(_MODULES)
+
+
+def get_config(arch: str) -> ModelConfig:
+    if arch not in _MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_MODULES)}")
+    return importlib.import_module(f"repro.configs.{_MODULES[arch]}").CONFIG
+
+
+def get_smoke_config(arch: str) -> ModelConfig:
+    return importlib.import_module(f"repro.configs.{_MODULES[arch]}").smoke_config()
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}

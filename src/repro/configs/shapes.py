@@ -1,0 +1,102 @@
+"""The assigned input-shape grid and ShapeDtypeStruct input specs.
+
+Four shapes per LM arch (40 cells):
+
+* ``train_4k``     seq 4096  × global_batch 256   -> train_step
+* ``prefill_32k``  seq 32768 × global_batch 32    -> prefill (serve)
+* ``decode_32k``   KV 32768  × global_batch 128   -> serve_step (1 new token)
+* ``long_500k``    KV 524288 × global_batch 1     -> serve_step, sub-quadratic
+                   archs only
+
+Skips (documented in DESIGN.md §Shape-grid):
+* encoder-only (hubert) has no autoregressive step -> decode/long are SKIP;
+* pure full-attention archs skip ``long_500k`` (no sub-quadratic mechanism).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                     # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524288, 1, "decode"),
+}
+
+# archs with a sub-quadratic long-context mechanism (may run long_500k)
+SUBQUADRATIC = frozenset({
+    "mamba2-780m",        # constant-state SSM
+    "zamba2-1.2b",        # hybrid (mamba body, periodic attn)
+    "gemma3-27b",         # 5:1 sliding-window:global
+    "mixtral-8x7b",       # SWA 4096 bounds the window
+    "deepseek-v2-236b",   # MLA latent cache (576/token/layer)
+})
+
+
+def skip_reason(arch: str, cfg: ModelConfig, shape: str) -> Optional[str]:
+    """None if the (arch, shape) cell runs; otherwise the documented reason."""
+    spec = SHAPES[shape]
+    if not cfg.causal and spec.kind == "decode":
+        return "encoder-only: no autoregressive decode step"
+    if shape == "long_500k" and arch not in SUBQUADRATIC:
+        return "pure full attention: unbounded full KV at 500k (no sub-quadratic mechanism)"
+    return None
+
+
+def grid_cells():
+    """All 40 (arch, shape) cells in deterministic order."""
+    from repro.configs import ARCH_IDS
+
+    return [(a, s) for a in ARCH_IDS for s in SHAPES]
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins; no allocation)
+# ---------------------------------------------------------------------------
+
+def _pos_struct(cfg: ModelConfig, b: int, s: int):
+    if cfg.mrope_sections is not None:
+        return jax.ShapeDtypeStruct((3, b, s), jnp.int32)
+    return jax.ShapeDtypeStruct((b, s), jnp.int32)
+
+
+def input_specs(cfg: ModelConfig, shape: str,
+                batch_override: Optional[int] = None) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStructs for every model input of a (config, shape) cell.
+
+    ``train``/``prefill``: token (or stub-frontend embedding) batch;
+    ``decode``: one new token per sequence (the KV cache is a separate
+    argument supplied by the caller via ``decoder.init_cache`` eval_shape).
+    """
+    spec = SHAPES[shape]
+    b = batch_override or spec.global_batch
+    s = spec.seq_len
+    stub_frontend = cfg.family in ("vlm", "audio")
+    out: Dict[str, jax.ShapeDtypeStruct] = {}
+    if spec.kind in ("train", "prefill"):
+        if stub_frontend:
+            out["embeds"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), jnp.bfloat16)
+        else:
+            out["tokens"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+        out["positions"] = _pos_struct(cfg, b, s)
+        if spec.kind == "train":
+            out["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    else:  # decode: one token step against a seq_len-deep cache
+        out["tokens"] = jax.ShapeDtypeStruct((b,), jnp.int32)
+        out["pos"] = jax.ShapeDtypeStruct((), jnp.int32)
+    return out

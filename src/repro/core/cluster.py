@@ -1,0 +1,553 @@
+"""Discrete-event simulator of a Lilac-TM / ALC replicated cluster.
+
+This is the faithful reproduction vehicle: N replicas, each with a local STM
+(TL2-style versioned store), a lease manager (coarse ALC or fine-grained FGL),
+a replication manager, the Transaction Forwarder and the DTD, driven by a
+deterministic event queue and the simulated GCS (OAB/URB/p2p with the paper's
+communication-step latency model).
+
+Algorithm variants (paper §4) are obtained by configuration:
+
+=============  ==========  ================
+variant        lease_kind  dtd.policy
+=============  ==========  ================
+ALC            alc         local
+FGL            fgl         local
+MG-ALC         alc         opt
+LILAC-TM-ST    fgl         short
+LILAC-TM-LT    fgl         long
+LILAC-TM-OPT   fgl         opt
+=============  ==========  ================
+
+Threads are closed-loop load generators: each of ``threads_per_node`` worker
+threads executes one transaction at a time, blocks through its commit phase,
+then starts the next — matching the paper's 2/4-threads-per-node runs.
+Execution (and forwarded re-execution) consumes a CPU slot at the executing
+node; slot occupancy feeds the CPU_i statistic used by constraint (3).
+"""
+from __future__ import annotations
+
+import itertools
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Callable, Dict, FrozenSet, List, Optional, Tuple
+
+import numpy as np
+
+from .conflict import ConflictClassMap
+from .dtd import DTD, DTDConfig
+from .events import EventQueue
+from .forwarder import CommitNotice, ForwardPolicy, ForwardRequest
+from .gcs import GCSLatency, SimGCS
+from .lease import ALCLeaseManager, FGLLeaseManager, LeaseRequest, LOR
+from .stats import CpuMeter, DecayedFrequency
+from .stm import Transaction, VersionedStore
+
+
+# --------------------------------------------------------------------------
+# Workload interface
+# --------------------------------------------------------------------------
+
+@dataclass
+class TxnSpec:
+    """A transaction's logic + static footprint, as sampled by a workload.
+
+    ``execute(store, stm_txn)`` performs the reads/writes (and is re-invoked
+    on re-execution, reading fresh values); ``items`` is the item footprint
+    used for conflict-class mapping (stable across re-executions, as in the
+    Bank/TPC-C benchmarks where the data-set is determined by the input
+    parameters).
+    """
+
+    execute: Callable[[VersionedStore, Transaction], float]
+    items: Tuple[int, ...]
+    read_only: bool = False
+    opt_hint: int = -1
+    exec_ms: Optional[float] = None
+
+
+class Workload:
+    def sample(self, node: int, rng: np.random.Generator) -> TxnSpec:
+        raise NotImplementedError
+
+
+# --------------------------------------------------------------------------
+# Simulation config & metrics
+# --------------------------------------------------------------------------
+
+@dataclass
+class SimConfig:
+    n_nodes: int = 4
+    threads_per_node: int = 2
+    n_items: int = 4096
+    n_classes: int = 256
+    lease_kind: str = "fgl"               # "fgl" | "alc"
+    dtd: DTDConfig = field(default_factory=lambda: DTDConfig(policy="local"))
+    # Calibrated regime (EXPERIMENTS.md §Calibration): communication-
+    # dominated, as in the paper's Gigabit-Ethernet cluster — short in-memory
+    # transactions (tens of us), ~0.35 ms per communication step, OAB
+    # sequencer serialization 0.3 ms/message.
+    latency: GCSLatency = field(
+        default_factory=lambda: GCSLatency(step_ms=0.35, oab_serialize_ms=0.3)
+    )
+    exec_ms: float = 0.03                  # mean RW execution time
+    ro_exec_ms: float = 0.02               # mean read-only execution time
+    validate_ms: float = 0.005
+    local_commit_ms: float = 0.002
+    msg_proc_ms: float = 0.01      # outbound protocol processing (dilates under load)
+    think_ms: float = 0.005
+    duration_ms: float = 2000.0
+    warmup_ms: float = 200.0
+    drain_ms: float = 200.0
+    stats_update_ms: float = 5.0           # staleness of piggybacked stats
+    forward: ForwardPolicy = field(default_factory=ForwardPolicy)
+    seed: int = 0
+    init_value: float = 1000.0
+
+
+@dataclass
+class Metrics:
+    commits: int = 0
+    ro_commits: int = 0
+    rw_commits: int = 0
+    aborts: int = 0
+    forwards: int = 0
+    lease_requests: int = 0
+    piggybacks: int = 0
+    rw_certified: int = 0
+    commit_times: List[Tuple[float, int]] = field(default_factory=list)
+    commit_latency_sum: float = 0.0
+
+    def throughput(self, t0: float, t1: float) -> float:
+        """Committed txns per second within [t0, t1) of simulated time."""
+        n = sum(1 for (t, _) in self.commit_times if t0 <= t < t1)
+        return n / max(1e-9, (t1 - t0)) * 1e3
+
+    def lease_reuse_rate(self) -> float:
+        """Paper Fig. 3(b): piggybacked RW txns / total RW txns certified."""
+        return self.piggybacks / max(1, self.rw_certified)
+
+
+# --------------------------------------------------------------------------
+# Per-replica state
+# --------------------------------------------------------------------------
+
+class Replica:
+    def __init__(self, node: int, cfg: SimConfig) -> None:
+        self.node = node
+        self.cfg = cfg
+        lm_cls = FGLLeaseManager if cfg.lease_kind == "fgl" else ALCLeaseManager
+        self.lm = lm_cls(node, cfg.n_classes)
+        self.store = VersionedStore(cfg.n_items, cfg.init_value)
+        self.freq = DecayedFrequency(cfg.n_nodes, cfg.n_classes)
+        self.cpu_view = np.zeros((cfg.n_nodes,), dtype=np.float64)
+        self.meter = CpuMeter(cfg.threads_per_node)
+        self.free_slots = cfg.threads_per_node
+        self.slot_queue: deque = deque()
+        self.slowdown = 1.0  # CPU-contention multiplier on processing times
+        self.waiters: List[Tuple["SimTxn", List[LOR]]] = []
+        self.pending_reqs: Dict[int, "SimTxn"] = {}
+
+
+@dataclass
+class SimTxn:
+    txid: int
+    origin: int
+    thread: int
+    spec: TxnSpec
+    ccs: FrozenSet[int]
+    t_start: float
+    stm: Transaction
+    lors: List[LOR] = field(default_factory=list)
+    exec_node: int = -1
+    reexecs: int = 0
+    forwards: int = 0
+    reused: bool = False
+    result: float = 0.0
+
+
+# --------------------------------------------------------------------------
+# The cluster
+# --------------------------------------------------------------------------
+
+class Cluster:
+    def __init__(self, cfg: SimConfig, workload: Workload, ccmap=None) -> None:
+        self.cfg = cfg
+        self.workload = workload
+        self.events = EventQueue()
+        self.gcs = SimGCS(self.events, cfg.n_nodes, cfg.latency)
+        self.ccmap = ccmap or ConflictClassMap(
+            cfg.n_classes, stride=max(1, cfg.n_items // cfg.n_classes)
+        )
+        self.replicas = [Replica(i, cfg) for i in range(cfg.n_nodes)]
+        self.dtd = DTD(cfg.dtd, cfg.n_nodes)
+        self.metrics = Metrics()
+        self.rngs = [np.random.default_rng(cfg.seed * 1000 + i) for i in range(cfg.n_nodes)]
+        self._txid = itertools.count(1)
+        self._reqid = itertools.count(1)
+        self._stopped = False
+        self._inflight: Dict[int, SimTxn] = {}
+        self.t_throughput: List[Tuple[float, int, int]] = []  # (t, node, 1)
+        for i in range(cfg.n_nodes):
+            self.gcs.on_opt[i] = self._make_handler(i, self._on_opt)
+            self.gcs.on_to[i] = self._make_handler(i, self._on_to)
+            self.gcs.on_urb[i] = self._make_handler(i, self._on_urb)
+            self.gcs.on_p2p[i] = self._make_handler(i, self._on_p2p)
+            self.gcs.on_view_change[i] = (
+                lambda view, failed, n=i: self._on_view_change(n, view, failed)
+            )
+
+    def _make_handler(self, node: int, fn):
+        return lambda msg, sender, n=node, f=fn: f(n, msg, sender)
+
+    # -- lifecycle -----------------------------------------------------------
+    def run(self) -> Metrics:
+        cfg = self.cfg
+        for node in range(cfg.n_nodes):
+            for thread in range(cfg.threads_per_node):
+                self.events.schedule(0.0, (lambda n=node, t=thread: self._start_txn(n, t)))
+        self._schedule_stats_sync()
+        self.events.run(cfg.duration_ms)
+        self._stopped = True
+        self.events.run(cfg.duration_ms + cfg.drain_ms)
+        return self.metrics
+
+    def throughput(self) -> float:
+        return self.metrics.throughput(self.cfg.warmup_ms, self.cfg.duration_ms)
+
+    def _schedule_stats_sync(self) -> None:
+        def sync():
+            if self._stopped:
+                return
+            t = self.events.now
+            truth = np.array(
+                [
+                    r.meter.utilization(t) if self.gcs.alive(r.node) else 1.0
+                    for r in self.replicas
+                ]
+            )
+            for r in self.replicas:
+                r.cpu_view[:] = truth
+            self.events.schedule(self.cfg.stats_update_ms, sync)
+
+        self.events.schedule(self.cfg.stats_update_ms, sync)
+
+    # -- CPU slots -------------------------------------------------------------
+    def _request_slot(self, node: int, fn: Callable[[], None]) -> None:
+        r = self.replicas[node]
+        if r.free_slots > 0:
+            r.free_slots -= 1
+            r.meter.acquire(self.events.now)
+            fn()
+        else:
+            r.slot_queue.append(fn)
+
+    def _release_slot(self, node: int) -> None:
+        r = self.replicas[node]
+        r.meter.release(self.events.now)
+        if r.slot_queue:
+            nxt = r.slot_queue.popleft()
+            r.meter.acquire(self.events.now)
+            self.events.schedule(0.0, nxt)
+        else:
+            r.free_slots += 1
+
+    def inject_load(
+        self, node: int, extra_load: float, slowdown: float, seize_slots: int = 0
+    ) -> None:
+        """Inject background CPU-intensive jobs (overload experiment, Fig 3c).
+
+        External jobs contend for the node's cores: ``seize_slots`` worker
+        slots are occupied outright, every remaining processing step at the
+        node (execution, re-execution, validation, commit processing, and the
+        protocol work of disseminating commits / lease releases) dilates by
+        ``slowdown``, and the node's reported CPU utilization rises by
+        ``extra_load`` (which is what constraint (3) reads).
+        """
+        r = self.replicas[node]
+        r.slowdown = slowdown
+        for _ in range(seize_slots):
+            self._request_slot(node, lambda: None)  # held for the run
+        r.meter.extra_load = extra_load
+
+    def _send_cost_ms(self, node: int) -> float:
+        """Outbound protocol-processing time (serialization, URB handoff).
+
+        Dilated by the node's CPU contention: an overloaded node is slow to
+        release leases and to disseminate write-sets, which is a large part
+        of why uninformed migration towards it hurts (Fig 3c).
+        """
+        r = self.replicas[node]
+        return self.cfg.msg_proc_ms * r.slowdown
+
+    def _ur_broadcast_from(self, node: int, msg) -> None:
+        d = self._send_cost_ms(node)
+        if d <= 0:
+            self.gcs.ur_broadcast(node, msg)
+        else:
+            self.events.schedule(d, lambda: self.gcs.ur_broadcast(node, msg))
+
+    # -- transaction lifecycle --------------------------------------------------
+    def _start_txn(self, node: int, thread: int) -> None:
+        if self._stopped or not self.gcs.alive(node):
+            return
+        rng = self.rngs[node]
+        spec = self.workload.sample(node, rng)
+        txn = SimTxn(
+            txid=next(self._txid),
+            origin=node,
+            thread=thread,
+            spec=spec,
+            ccs=self.ccmap.get_conflict_classes(spec.items),
+            t_start=self.events.now,
+            stm=Transaction(txid=0, origin=node),
+        )
+        txn.stm.txid = txn.txid
+        mean = spec.exec_ms or (self.cfg.ro_exec_ms if spec.read_only else self.cfg.exec_ms)
+        dur = float(rng.exponential(mean) * 0.5 + mean * 0.5)  # bounded jitter
+        dur *= self.replicas[node].slowdown
+        self._request_slot(node, lambda: self.events.schedule(dur, lambda: self._exec_done(txn, node)))
+
+    def _exec_done(self, txn: SimTxn, node: int) -> None:
+        r = self.replicas[node]
+        txn.stm = Transaction(txid=txn.txid, origin=txn.origin)
+        txn.result = txn.spec.execute(r.store, txn.stm)
+        self._release_slot(node)
+        if txn.spec.read_only:
+            self.events.schedule(
+                self.cfg.local_commit_ms, lambda: self._txn_done(txn, committed=True)
+            )
+            return
+        self._dispatch(txn, node)
+
+    # -- DTD dispatch -------------------------------------------------------------
+    def _dispatch(self, txn: SimTxn, node: int) -> None:
+        self._inflight[txn.txid] = txn
+        r = self.replicas[node]
+        target = self.dtd.decide(
+            origin=node,
+            ccs=txn.ccs,
+            lease_owner_of_cc=r.lm.head_owner,
+            freq_rates=r.freq.rates(self.events.now),
+            cpu=r.cpu_view,
+            opt_hint=txn.spec.opt_hint,
+        )
+        if target != node and self.gcs.alive(target) and self.cfg.forward.may_forward(txn.forwards):
+            txn.forwards += 1
+            self.metrics.forwards += 1
+            self.gcs.p2p_send(
+                node,
+                target,
+                ("forward", txn),
+            )
+        else:
+            self._certify(txn, node)
+
+    # -- certification (replication manager) ----------------------------------------
+    def _certify(self, txn: SimTxn, node: int) -> None:
+        txn.exec_node = node
+        r = self.replicas[node]
+        self.metrics.rw_certified += 1
+        lors = r.lm.try_piggyback(txn.ccs)
+        if lors is not None:
+            txn.reused = True
+            self.metrics.piggybacks += 1
+            txn.lors = lors
+            self._wait_enabled(txn, node)
+        else:
+            req = LeaseRequest(
+                req_id=next(self._reqid),
+                proc=node,
+                ccs=tuple(sorted(txn.ccs)),
+                coarse=(self.cfg.lease_kind == "alc"),
+            )
+            r.lm.n_requests += 1
+            self.metrics.lease_requests += 1
+            r.pending_reqs[req.req_id] = txn
+            self.gcs.oa_broadcast(node, ("lease", req))
+
+    def _wait_enabled(self, txn: SimTxn, node: int) -> None:
+        r = self.replicas[node]
+        r.waiters.append((txn, txn.lors))
+        self._check_waiters(node)
+
+    def _check_waiters(self, node: int) -> None:
+        r = self.replicas[node]
+        still: List[Tuple[SimTxn, List[LOR]]] = []
+        ready: List[SimTxn] = []
+        for (txn, lors) in r.waiters:
+            if r.lm.is_enabled(lors):
+                ready.append(txn)
+            else:
+                still.append((txn, lors))
+        r.waiters = still
+        for txn in ready:
+            # certification + commit processing is CPU work at the executing
+            # node: occupy a worker slot for its (dilated) duration, so an
+            # overloaded node's commit phase queues behind the external jobs
+            dur = (self.cfg.validate_ms + self.cfg.local_commit_ms) * r.slowdown
+
+            def start(t=txn, d=dur):
+                def fin():
+                    self._release_slot(node)
+                    self._validate_and_commit(t, node)
+                self.events.schedule(d, fin)
+
+            self._request_slot(node, start)
+
+    def _validate_and_commit(self, txn: SimTxn, node: int) -> None:
+        r = self.replicas[node]
+        if r.store.validate(txn.stm):
+            self._commit(txn, node)
+        else:
+            self.metrics.aborts += 1
+            txn.reexecs += 1
+            if txn.reexecs > self.cfg.forward.max_reexec:
+                # give up: release leases, notify origin with an abort
+                self._finish_leases(txn, node)
+                if node != txn.origin:
+                    self.gcs.p2p_send(
+                        node,
+                        txn.origin,
+                        ("notice", CommitNotice(txn.txid, txn.origin, txn.thread, False)),
+                    )
+                else:
+                    self._txn_done(txn, committed=False)
+                return
+            # re-execute holding the leases (ALC re-execution rule): no other
+            # replica can have updated the leased classes, so the re-run is
+            # conflict-free provided the data-set is unchanged.
+            rng = self.rngs[node]
+            mean = txn.spec.exec_ms or self.cfg.exec_ms
+            dur = float(rng.exponential(mean) * 0.5 + mean * 0.5) * r.slowdown
+            def reexec():
+                self.events.schedule(dur, lambda: self._reexec_done(txn, node))
+            self._request_slot(node, reexec)
+
+    def _reexec_done(self, txn: SimTxn, node: int) -> None:
+        r = self.replicas[node]
+        txn.stm = Transaction(txid=txn.txid, origin=txn.origin)
+        txn.result = txn.spec.execute(r.store, txn.stm)
+        self._release_slot(node)
+        self._validate_and_commit(txn, node)
+
+    def _commit(self, txn: SimTxn, node: int) -> None:
+        r = self.replicas[node]
+        r.store.apply_versioned(txn.stm.write_set, txn.txid)
+        self._ur_broadcast_from(
+            node,
+            (
+                "commit",
+                {
+                    "txid": txn.txid,
+                    "origin": txn.origin,
+                    "thread": txn.thread,
+                    "ccs": tuple(sorted(txn.ccs)),
+                    "writes": dict(txn.stm.write_set),
+                    "result": txn.result,
+                    "executed_on": node,
+                },
+            ),
+        )
+        self._finish_leases(txn, node)
+
+    def _finish_leases(self, txn: SimTxn, node: int) -> None:
+        r = self.replicas[node]
+        if not txn.lors:
+            return
+        to_free = r.lm.finished_xact(txn.lors)
+        txn.lors = []
+        if to_free:
+            self._ur_broadcast_from(node, ("freed", [l.key() for l in to_free]))
+
+    def _txn_done(self, txn: SimTxn, committed: bool) -> None:
+        self._inflight.pop(txn.txid, None)
+        m = self.metrics
+        if committed:
+            m.commits += 1
+            if txn.spec.read_only:
+                m.ro_commits += 1
+            else:
+                m.rw_commits += 1
+            m.commit_times.append((self.events.now, txn.origin))
+            m.commit_latency_sum += self.events.now - txn.t_start
+        # closed loop: the originating thread starts its next transaction
+        self.events.schedule(
+            self.cfg.think_ms, (lambda: self._start_txn(txn.origin, txn.thread))
+        )
+
+    # -- GCS handlers ----------------------------------------------------------------
+    def _on_opt(self, node: int, msg, sender: int) -> None:
+        kind, payload = msg
+        if kind != "lease":
+            return
+        req: LeaseRequest = payload
+        r = self.replicas[node]
+        to_free = r.lm.on_opt_deliver(req)
+        if to_free:
+            self._ur_broadcast_from(node, ("freed", [l.key() for l in to_free]))
+
+    def _on_to(self, node: int, msg, sender: int) -> None:
+        kind, payload = msg
+        if kind != "lease":
+            return
+        req: LeaseRequest = payload
+        r = self.replicas[node]
+        lors = r.lm.on_to_deliver(req)
+        if req.proc == node:
+            txn = r.pending_reqs.pop(req.req_id, None)
+            if txn is not None:
+                txn.lors = lors
+                self._wait_enabled(txn, node)
+        self._check_waiters(node)
+
+    def _on_urb(self, node: int, msg, sender: int) -> None:
+        kind, payload = msg
+        r = self.replicas[node]
+        if kind == "freed":
+            r.lm.on_ur_deliver_freed(payload)
+            self._check_waiters(node)
+        elif kind == "commit":
+            c = payload
+            if node != c["executed_on"]:
+                r.store.apply_versioned(c["writes"], c["txid"])
+            r.freq.record(self.events.now, c["origin"], c["ccs"])
+            if node == c["origin"]:
+                # resume the originating thread (result piggybacked on the
+                # commit message, §3.2)
+                self._complete_origin(c["txid"])
+
+    def _on_p2p(self, node: int, msg, sender: int) -> None:
+        kind, payload = msg
+        if kind == "forward":
+            txn: SimTxn = payload
+            self._certify(txn, node)
+        elif kind == "notice":
+            n: CommitNotice = payload
+            # aborted after max re-executions: surface to the application
+            # (paper: explicit exception); the thread moves on.
+            self._inflight.pop(n.txid, None)
+            self.events.schedule(
+                self.cfg.think_ms, (lambda: self._start_txn(n.origin, n.origin_thread))
+            )
+
+    # origin-side completion bookkeeping -------------------------------------------
+    def _complete_origin(self, txid: int) -> None:
+        txn = self._inflight.pop(txid, None)
+        if txn is None:
+            return
+        self._txn_done(txn, committed=True)
+
+    def _on_view_change(self, node: int, view: List[int], failed: int) -> None:
+        r = self.replicas[node]
+        r.lm.purge_proc(failed)
+        # transactions this node forwarded to (or had pending at) the failed
+        # member are restarted locally — fail-stop recovery for the TF path.
+        for txid, txn in list(self._inflight.items()):
+            if txn.origin == node and txn.exec_node == failed:
+                del self._inflight[txid]
+                self.events.schedule(
+                    self.cfg.think_ms,
+                    (lambda t=txn: self._start_txn(t.origin, t.thread)),
+                )
+        self._check_waiters(node)

@@ -1,0 +1,62 @@
+"""Deterministic discrete-event engine used by the cluster simulator.
+
+Events are ordered by (time, seq) where ``seq`` is a monotonically increasing
+issue counter — two events scheduled for the same instant fire in the order
+they were scheduled, which makes every simulation run bit-reproducible for a
+given seed.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+from dataclasses import dataclass, field
+from typing import Any, Callable, Optional
+
+
+@dataclass(order=True)
+class _Event:
+    time: float
+    seq: int
+    fn: Callable[[], None] = field(compare=False)
+    cancelled: bool = field(default=False, compare=False)
+
+
+class EventQueue:
+    """A deterministic priority queue of timed callbacks."""
+
+    def __init__(self) -> None:
+        self._heap: list[_Event] = []
+        self._seq = itertools.count()
+        self.now: float = 0.0
+        self.n_dispatched: int = 0
+
+    def schedule(self, delay: float, fn: Callable[[], None]) -> _Event:
+        if delay < 0:
+            raise ValueError(f"negative delay {delay}")
+        ev = _Event(self.now + delay, next(self._seq), fn)
+        heapq.heappush(self._heap, ev)
+        return ev
+
+    def at(self, time: float, fn: Callable[[], None]) -> _Event:
+        return self.schedule(max(0.0, time - self.now), fn)
+
+    def cancel(self, ev: _Event) -> None:
+        ev.cancelled = True
+
+    def run(self, until: float, max_events: Optional[int] = None) -> None:
+        """Dispatch events in order until simulated ``until`` time."""
+        n = 0
+        while self._heap and self._heap[0].time <= until:
+            ev = heapq.heappop(self._heap)
+            if ev.cancelled:
+                continue
+            self.now = ev.time
+            ev.fn()
+            self.n_dispatched += 1
+            n += 1
+            if max_events is not None and n >= max_events:
+                break
+        self.now = max(self.now, until)
+
+    def empty(self) -> bool:
+        return not any(not e.cancelled for e in self._heap)

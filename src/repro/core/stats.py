@@ -1,0 +1,75 @@
+"""Access-frequency and CPU-utilization statistics (DTD inputs).
+
+The paper gathers, per node, the access frequencies F(j, x) — transactions/s
+originated on node j touching conflict class x — and CPU utilization, both
+piggybacked on commit / lease-request messages.  We model the piggybacking by
+updating every replica's *view* of these statistics at message-delivery time
+(the cluster calls :meth:`on_commit_delivered`), so views are as stale as the
+message latency, exactly like the real system.
+
+Frequencies use exponentially-decayed counters: an event at time t adds 1 to
+a counter that decays as exp(-Δt/τ); the rate estimate is counter/τ.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Iterable
+
+import numpy as np
+
+
+class DecayedFrequency:
+    """F[j, x] matrix of exponentially-decayed event rates."""
+
+    def __init__(self, n_nodes: int, n_classes: int, tau_ms: float = 200.0) -> None:
+        self.tau = tau_ms
+        self.counts = np.zeros((n_nodes, n_classes), dtype=np.float64)
+        self.last_t = 0.0
+
+    def _decay_to(self, t: float) -> None:
+        if t > self.last_t:
+            self.counts *= math.exp(-(t - self.last_t) / self.tau)
+            self.last_t = t
+
+    def record(self, t: float, origin: int, ccs: Iterable[int]) -> None:
+        self._decay_to(t)
+        for cc in ccs:
+            self.counts[origin, cc] += 1.0
+
+    def rates(self, t: float) -> np.ndarray:
+        """F(j, x) in events/ms, shape [n_nodes, n_classes]."""
+        self._decay_to(t)
+        return self.counts / self.tau
+
+
+class CpuMeter:
+    """EWMA utilization of a node's execution slots."""
+
+    def __init__(self, n_slots: int, tau_ms: float = 50.0) -> None:
+        self.n_slots = max(1, n_slots)
+        self.tau = tau_ms
+        self.value = 0.0
+        self.busy = 0
+        self.extra_load = 0.0  # injected background jobs (overload experiment)
+        self.last_t = 0.0
+
+    def _advance(self, t: float) -> None:
+        if t > self.last_t:
+            inst = min(1.0, self.busy / self.n_slots + self.extra_load)
+            a = math.exp(-(t - self.last_t) / self.tau)
+            self.value = a * self.value + (1 - a) * inst
+            self.last_t = t
+
+    def acquire(self, t: float) -> None:
+        self._advance(t)
+        self.busy += 1
+
+    def release(self, t: float) -> None:
+        self._advance(t)
+        self.busy -= 1
+        assert self.busy >= 0
+
+    def utilization(self, t: float) -> float:
+        self._advance(t)
+        return min(1.0, self.value + self.extra_load)

@@ -1,0 +1,119 @@
+"""Batched TL2 certification — Pallas TPU kernel (the paper's hot loop).
+
+When a replica (pod controller) validates a *batch* of remote/forwarded
+transactions (Lilac-TM §3.2: forwarded transactions are certified at the
+target without re-execution), the work is: gather each transaction's
+read-set versions from the store's version array, compare against the
+snapshot versions, and check write locks.  At pod scale (thousands of
+in-flight certifications per lease window) this is a bandwidth-bound
+gather+compare — exactly the kind of loop worth a VMEM-resident kernel.
+
+Tiling: transactions are tiled over the grid; the version array is tiled
+into VMEM *chunks* with the gather performed as ``chunk-local compare``
+(a one-hot-free masked equality over the chunk) — the TPU-native
+reformulation of a random gather: each (txn-tile × version-chunk) cell
+checks only the read entries whose item falls in the chunk, accumulating a
+per-transaction conflict flag across chunks (innermost grid dim, scratch
+persists).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _validate_kernel(
+    items_ref, vers_ref, witems_ref, store_ref, locks_ref,   # inputs
+    ok_ref,                                                   # output [Bt]
+    bad_scr,                                                  # scratch [Bt]
+    *, n_chunks: int, chunk: int,
+):
+    ic = pl.program_id(1)
+
+    @pl.when(ic == 0)
+    def _init():
+        bad_scr[...] = jnp.zeros_like(bad_scr)
+
+    items = items_ref[...]            # [Bt, R] int32 (-1 padded)
+    vers = vers_ref[...]              # [Bt, R] int32
+    witems = witems_ref[...]          # [Bt, W] int32 (-1 padded)
+    store = store_ref[...]            # [chunk] int32
+    locks = locks_ref[...]            # [chunk] int32 (0/1)
+
+    lo = ic * chunk
+    # read-set: entries whose item falls in this chunk must match versions
+    in_chunk = (items >= lo) & (items < lo + chunk)
+    local = jnp.clip(items - lo, 0, chunk - 1)
+    cur = jnp.take(store, local, axis=0)              # [Bt, R]
+    mismatch = in_chunk & (cur != vers)
+    # write-set: locked items are conflicts
+    w_in = (witems >= lo) & (witems < lo + chunk)
+    wlocal = jnp.clip(witems - lo, 0, chunk - 1)
+    wlocked = w_in & (jnp.take(locks, wlocal, axis=0) > 0)
+    bad_scr[...] = (
+        bad_scr[...]
+        + jnp.sum(mismatch.astype(jnp.int32), axis=1)
+        + jnp.sum(wlocked.astype(jnp.int32), axis=1)
+    )
+
+    @pl.when(ic == n_chunks - 1)
+    def _finish():
+        ok_ref[...] = (bad_scr[...] == 0)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_txns", "chunk", "interpret"),
+)
+def lease_validate(
+    store_versions: jax.Array,    # [n_items] int32
+    read_items: jax.Array,        # [B, R] int32 (-1 padded)
+    read_versions: jax.Array,     # [B, R] int32
+    write_locks: jax.Array,       # [n_items] int32 (0/1)
+    write_items: jax.Array,       # [B, W] int32 (-1 padded)
+    *,
+    block_txns: int = 256,
+    chunk: int = 4096,
+    interpret: bool = False,
+) -> jax.Array:
+    b, r = read_items.shape
+    n = store_versions.shape[0]
+    chunk = min(chunk, n)
+    pad_n = (-n) % chunk
+    if pad_n:
+        store_versions = jnp.pad(store_versions, (0, pad_n), constant_values=-2)
+        write_locks = jnp.pad(write_locks, (0, pad_n))
+    bt = min(block_txns, b)
+    pad_b = (-b) % bt
+    if pad_b:
+        read_items = jnp.pad(read_items, ((0, pad_b), (0, 0)), constant_values=-1)
+        read_versions = jnp.pad(read_versions, ((0, pad_b), (0, 0)))
+        write_items = jnp.pad(write_items, ((0, pad_b), (0, 0)), constant_values=-1)
+    nb = read_items.shape[0] // bt
+    nc = store_versions.shape[0] // chunk
+
+    kernel = functools.partial(_validate_kernel, n_chunks=nc, chunk=chunk)
+    ok = pl.pallas_call(
+        kernel,
+        grid=(nb, nc),
+        in_specs=[
+            pl.BlockSpec((bt, r), lambda ib, ic: (ib, 0)),
+            pl.BlockSpec((bt, r), lambda ib, ic: (ib, 0)),
+            pl.BlockSpec((bt, write_items.shape[1]), lambda ib, ic: (ib, 0)),
+            pl.BlockSpec((chunk,), lambda ib, ic: (ic,)),
+            pl.BlockSpec((chunk,), lambda ib, ic: (ic,)),
+        ],
+        out_specs=pl.BlockSpec((bt,), lambda ib, ic: (ib,)),
+        out_shape=jax.ShapeDtypeStruct((read_items.shape[0],), jnp.bool_),
+        scratch_shapes=[_vmem((bt,), jnp.int32)],
+        interpret=interpret or (jax.default_backend() != "tpu"),
+    )(read_items, read_versions, write_items, store_versions, write_locks)
+    return ok[:b]
+
+
+def _vmem(shape, dtype):
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM(shape, dtype)

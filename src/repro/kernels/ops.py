@@ -1,0 +1,59 @@
+"""Jit'd public wrappers over the Pallas kernels with automatic fallback.
+
+``backend="auto"`` uses the Pallas kernel on TPU and the pure-jnp oracle
+elsewhere (kernels still run under ``interpret=True`` in the test-suite
+shape sweeps).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .flash_attention import flash_attention as _flash
+from .lease_validate import lease_validate as _lease_validate
+from .ssd_scan import ssd_scan as _ssd
+
+
+def _use_pallas(backend: str) -> bool:
+    if backend == "auto":
+        return jax.default_backend() == "tpu"
+    return backend == "pallas"
+
+
+def attention(q, k, v, *, q_positions, kv_positions, causal=True,
+              sliding_window=None, logit_softcap=0.0, scale=None,
+              backend: str = "auto"):
+    if _use_pallas(backend):
+        return _flash(q, k, v, q_positions=q_positions,
+                      kv_positions=kv_positions, causal=causal,
+                      sliding_window=sliding_window,
+                      logit_softcap=logit_softcap, scale=scale)
+    return ref.sdpa_ref(q, k, v, q_positions=q_positions,
+                        kv_positions=kv_positions, causal=causal,
+                        sliding_window=sliding_window,
+                        logit_softcap=logit_softcap, scale=scale)
+
+
+def ssd(x, dt, a, b_mat, c_mat, *, chunk=256, h0=None, backend: str = "auto"):
+    if _use_pallas(backend) and b_mat.shape[2] == 1:
+        return _ssd(x, dt, a, b_mat, c_mat, chunk=chunk, h0=h0)
+    return ref.ssd_ref(x, dt, a, b_mat, c_mat, chunk=chunk, h0=h0)
+
+
+def validate_transactions(
+    store_versions, read_items, read_versions,
+    write_locks=None, write_items=None, *, backend: str = "auto",
+):
+    b = read_items.shape[0]
+    if write_locks is None:
+        write_locks = jnp.zeros_like(store_versions)
+    if write_items is None:
+        write_items = jnp.full((b, 1), -1, jnp.int32)
+    if _use_pallas(backend):
+        return _lease_validate(store_versions, read_items, read_versions,
+                               write_locks, write_items)
+    return ref.lease_validate_ref(store_versions, read_items, read_versions,
+                                  write_locks > 0, write_items)

@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+# --- flash attention oracle --------------------------------------------------
+
+def sdpa_ref(
+    q, k, v, *, q_positions, kv_positions, causal=True, sliding_window=None,
+    logit_softcap=0.0, scale=None,
+):
+    from repro.models.attention import _sdpa_ref, attn_mask
+
+    scale = scale if scale is not None else q.shape[-1] ** -0.5
+    mask = attn_mask(q_positions, kv_positions, causal, sliding_window)
+    return _sdpa_ref(q, k, v, mask, scale, logit_softcap)
+
+
+# --- SSD oracle ---------------------------------------------------------------
+
+def ssd_ref(
+    x, dt, a, b_mat, c_mat, *, chunk=256, h0=None,
+) -> Tuple[jax.Array, jax.Array]:
+    from repro.models.ssm import ssd_chunked
+
+    return ssd_chunked(x, dt, a, b_mat, c_mat, chunk, h0=h0,
+                       return_final_state=True)
+
+
+# --- lease-validate oracle -----------------------------------------------------
+
+def lease_validate_ref(
+    store_versions: jax.Array,   # [n_items] int32
+    read_items: jax.Array,       # [B, R] int32, -1 padded
+    read_versions: jax.Array,    # [B, R] int32
+    write_locks: Optional[jax.Array] = None,   # [n_items] bool
+    write_items: Optional[jax.Array] = None,   # [B, W] int32, -1 padded
+) -> jax.Array:
+    """TL2 certification: read versions unchanged AND write set unlocked."""
+    n = store_versions.shape[0]
+    valid = read_items >= 0
+    cur = store_versions[jnp.clip(read_items, 0, n - 1)]
+    ok = jnp.all(jnp.where(valid, cur == read_versions, True), axis=1)
+    if write_locks is not None and write_items is not None:
+        wvalid = write_items >= 0
+        locked = write_locks[jnp.clip(write_items, 0, n - 1)]
+        ok &= jnp.all(jnp.where(wvalid, ~locked, True), axis=1)
+    return ok

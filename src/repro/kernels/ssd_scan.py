@@ -1,0 +1,133 @@
+"""Mamba2 SSD chunked scan — Pallas TPU kernel.
+
+Grid ``(B, nHeadBlocks, nChunks)`` with the chunk axis innermost: the
+inter-chunk recurrent state (``[Hb, P, N]`` fp32) lives in VMEM scratch and
+persists across the chunk sweep — the sequential recurrence is expressed
+through TPU grid semantics, while each chunk's quadratic intra-chunk term
+is MXU work on VMEM tiles.  Head-blocking keeps the [Hb, L, L] decay
+matrices inside VMEM.
+
+Restriction: ``n_groups == 1`` (true for every assigned SSM arch); the
+general grouped case falls back to the jnp oracle
+(:func:`repro.kernels.ref.ssd_ref`).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ssd_kernel(
+    x_ref, dt_ref, a_ref, b_ref, c_ref, h0_ref,     # inputs
+    y_ref, hout_ref,                                 # outputs
+    state_scr,                                       # VMEM scratch [Hb, P, N]
+    *, nc: int,
+):
+    inc = pl.program_id(2)
+
+    @pl.when(inc == 0)
+    def _init():
+        state_scr[...] = h0_ref[0].astype(jnp.float32)
+
+    x = x_ref[0].astype(jnp.float32)          # [L, Hb, P]
+    dt = dt_ref[0].astype(jnp.float32)        # [L, Hb]
+    a = a_ref[...].astype(jnp.float32)        # [Hb]
+    bm = b_ref[0, :, 0, :].astype(jnp.float32)   # [L, N]   (G == 1)
+    cm = c_ref[0, :, 0, :].astype(jnp.float32)   # [L, N]
+
+    l = x.shape[0]
+    da = dt * a[None, :]                      # [L, Hb] log-decay per step
+    dacum = jnp.cumsum(da, axis=0)            # [L, Hb]
+
+    # --- intra-chunk quadratic term -------------------------------------
+    # seg[h, i, j] = dacum[i,h] - dacum[j,h]  (i >= j)
+    seg = dacum.T[:, :, None] - dacum.T[:, None, :]          # [Hb, L, L]
+    tri = jnp.tril(jnp.ones((l, l), jnp.float32))
+    decay = jnp.exp(jnp.where(tri > 0, seg, -jnp.inf)) * tri  # [Hb, L, L]
+    cb = jax.lax.dot_general(                                 # [L, L]
+        cm, bm, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32,
+    )
+    w = cb[None, :, :] * decay * dt.T[:, None, :]             # [Hb, L(i), L(j)]
+    y_diag = jnp.einsum("hij,jhp->ihp", w, x)                 # [L, Hb, P]
+
+    # --- contribution of the carried state --------------------------------
+    state = state_scr[...]                                     # [Hb, P, N]
+    y_off = jnp.einsum("ln,hpn,lh->lhp", cm, state, jnp.exp(dacum))
+
+    # --- state update -------------------------------------------------------
+    tail = jnp.exp(dacum[-1:, :] - dacum)                      # [L, Hb]
+    upd = jnp.einsum("ln,lh,lhp->hpn", bm, tail * dt, x)
+    state_scr[...] = state * jnp.exp(dacum[-1, :])[:, None, None] + upd
+
+    y_ref[0] = (y_diag + y_off).astype(y_ref.dtype)
+
+    @pl.when(inc == nc - 1)
+    def _finish():
+        hout_ref[0] = state_scr[...]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("chunk", "block_heads", "interpret"),
+)
+def ssd_scan(
+    x: jax.Array,       # [B, S, H, P]
+    dt: jax.Array,      # [B, S, H]  (softplus'd)
+    a: jax.Array,       # [H]
+    b_mat: jax.Array,   # [B, S, 1, N]
+    c_mat: jax.Array,   # [B, S, 1, N]
+    *,
+    chunk: int = 256,
+    h0: Optional[jax.Array] = None,     # [B, H, P, N]
+    block_heads: int = 8,
+    interpret: bool = False,
+) -> Tuple[jax.Array, jax.Array]:
+    """Returns (y [B, S, H, P], final_state [B, H, P, N] fp32)."""
+    bsz, s, h, p = x.shape
+    g, n = b_mat.shape[2], b_mat.shape[3]
+    if g != 1:
+        from . import ref
+
+        return ref.ssd_ref(x, dt, a, b_mat, c_mat, chunk=chunk, h0=h0)
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    hb = min(block_heads, h)
+    while h % hb:
+        hb -= 1
+    nh = h // hb
+    if h0 is None:
+        h0 = jnp.zeros((bsz, h, p, n), jnp.float32)
+
+    kernel = functools.partial(_ssd_kernel, nc=nc)
+    y, hout = pl.pallas_call(
+        kernel,
+        grid=(bsz, nh, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, hb, p), lambda ib, ih, ic: (ib, ic, ih, 0)),
+            pl.BlockSpec((1, chunk, hb), lambda ib, ih, ic: (ib, ic, ih)),
+            pl.BlockSpec((hb,), lambda ib, ih, ic: (ih,)),
+            pl.BlockSpec((1, chunk, 1, n), lambda ib, ih, ic: (ib, ic, 0, 0)),
+            pl.BlockSpec((1, chunk, 1, n), lambda ib, ih, ic: (ib, ic, 0, 0)),
+            pl.BlockSpec((1, hb, p, n), lambda ib, ih, ic: (ib, ih, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, hb, p), lambda ib, ih, ic: (ib, ic, ih, 0)),
+            pl.BlockSpec((1, hb, p, n), lambda ib, ih, ic: (ib, ih, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, s, h, p), x.dtype),
+            jax.ShapeDtypeStruct((bsz, h, p, n), jnp.float32),
+        ],
+        scratch_shapes=[_vmem((hb, p, n), jnp.float32)],
+        interpret=interpret or (jax.default_backend() != "tpu"),
+    )(x, dt, a, b_mat, c_mat, h0)
+    return y, hout
+
+
+def _vmem(shape, dtype):
+    from jax.experimental.pallas import tpu as pltpu
+
+    return pltpu.VMEM(shape, dtype)

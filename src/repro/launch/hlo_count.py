@@ -1,0 +1,266 @@
+"""Trip-count-aware HLO cost model (FLOPs + collectives).
+
+XLA's ``compiled.cost_analysis()`` counts each ``while`` body **once**
+(verified experimentally: a 10-iteration ``lax.scan`` of matmuls reports
+exactly 1/10 of the true FLOPs), which silently misprices every
+scan-over-layers model and every collective inside the scanned body.
+
+This module re-derives costs from the optimized HLO text with call-graph
+multiplicity:
+
+* computations are parsed into instruction lists with a name -> shape table;
+* ``while`` trip counts come from the loop-condition computation (the
+  ``constant(N)`` compared against the induction variable — exact for
+  ``lax.scan``/``fori_loop`` lowerings);
+* a DFS from ENTRY propagates multiplicity through while bodies, fusions,
+  calls and conditionals;
+* per instruction: ``dot`` FLOPs are ``2 · prod(result) · contraction``
+  (read off ``dot_dimension_numbers`` + operand shapes); elementwise /
+  reduce ops count 1 FLOP/elem (dots dominate);
+* collectives reuse the ring-cost model of :mod:`hlo_analysis`, now
+  weighted by multiplicity.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from .hlo_analysis import (COLLECTIVES, CollectiveStats, _DTYPE_BYTES,
+                           _group_size)
+
+_COMP_HEAD_RE = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\("
+)
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+_OPERANDS_RE = re.compile(r"%([\w.\-]+)")
+_CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_TO_APPLY_RE = re.compile(r"to_apply=%?([\w.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w.\-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_LHS_C_RE = re.compile(r"lhs_contracting_dims=\{([0-9,]*)\}")
+_LHS_B_RE = re.compile(r"lhs_batch_dims=\{([0-9,]*)\}")
+
+_ELEMWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "power",
+    "exponential", "tanh", "log", "rsqrt", "sqrt", "negate", "abs",
+    "logistic", "cosine", "sine", "select", "compare", "and", "or", "xor",
+    "clamp", "floor", "ceil", "round-nearest-even", "sign", "atan2",
+    "exponential-minus-one", "log-plus-one", "reduce", "erf",
+}
+
+
+def _shape_elems(ty: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(ty):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n
+    return total
+
+
+def _shape_bytes_ty(ty: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(ty):
+        bs = _DTYPE_BYTES.get(dt)
+        if bs is None:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * bs
+    return total
+
+
+@dataclass
+class Instr:
+    name: str
+    ty: str
+    opcode: str
+    line: str
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: List[Instr] = field(default_factory=list)
+    shapes: Dict[str, str] = field(default_factory=dict)
+
+
+def parse_module(text: str) -> Tuple[Dict[str, Computation], Optional[str]]:
+    comps: Dict[str, Computation] = {}
+    entry: Optional[str] = None
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        s = line.strip()
+        if cur is None:
+            # computation header: column-0 "<name> (params) -> type {"
+            if (s.endswith("{") and "->" in s and line and not line[0].isspace()
+                    and (s.startswith("%") or s.startswith("ENTRY"))):
+                m = _COMP_HEAD_RE.match(s)
+                if m:
+                    cur = Computation(m.group(2))
+                    if m.group(1):
+                        entry = m.group(2)
+                continue
+        else:
+            if s == "}":
+                comps[cur.name] = cur
+                cur = None
+                continue
+            m = _INSTR_RE.match(line)
+            if m:
+                ins = Instr(m.group(1), m.group(2), m.group(3), line)
+                cur.instrs.append(ins)
+                cur.shapes[ins.name] = ins.ty
+    if cur is not None:
+        comps[cur.name] = cur
+    return comps, entry
+
+
+def _trip_count(cond: Computation) -> int:
+    """lax.scan lowers to (i < N): the compare constant is the trip count."""
+    best = 1
+    for ins in cond.instrs:
+        if "constant(" in ins.line:
+            for c in _CONST_RE.findall(ins.line):
+                best = max(best, int(c))
+    return best
+
+
+def _dot_flops(ins: Instr, shapes: Dict[str, str]) -> float:
+    ops = _OPERANDS_RE.findall(ins.line[ins.line.index("(") :])
+    if not ops:
+        return 0.0
+    lhs_ty = shapes.get(ops[0], "")
+    lhs_dims: List[int] = []
+    m = _SHAPE_RE.search(lhs_ty)
+    if m:
+        lhs_dims = [int(d) for d in m.group(2).split(",") if d]
+    contr = _LHS_C_RE.search(ins.line)
+    k = 1
+    if contr and lhs_dims:
+        for d in contr.group(1).split(","):
+            if d and int(d) < len(lhs_dims):
+                k *= lhs_dims[int(d)]
+    out_elems = _shape_elems(ins.ty)
+    return 2.0 * out_elems * k
+
+
+@dataclass
+class HloCosts:
+    flops: float = 0.0
+    elemwise_flops: float = 0.0
+    collectives: CollectiveStats = field(default_factory=CollectiveStats)
+    n_while: int = 0
+    trip_counts: List[int] = field(default_factory=list)
+
+    def as_dict(self) -> Dict:
+        return {
+            "flops": self.flops,
+            "elemwise_flops": self.elemwise_flops,
+            "collectives": self.collectives.as_dict(),
+            "n_while": self.n_while,
+            "trip_counts": self.trip_counts,
+        }
+
+
+def _collective_line(kind: str, ins: Instr, mult: float, st: CollectiveStats):
+    shapes = _SHAPE_RE.findall(ins.ty)
+    sizes, f32_sizes = [], []
+    for dt, dims in shapes:
+        bs = _DTYPE_BYTES.get(dt)
+        if bs is None:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        sizes.append(n * bs)
+        f32_sizes.append(dt in ("f32", "f64"))
+    if ins.opcode.endswith("-start") and len(sizes) > 1:
+        sizes = sizes[len(sizes) // 2:]
+        f32_sizes = f32_sizes[len(f32_sizes) // 2:]
+    size = sum(sizes)
+    size_f32 = sum(s for s, is32 in zip(sizes, f32_sizes) if is32)
+    g = _group_size(ins.line)
+    ring = (g - 1) / g if g > 1 else 0.0
+    if kind == "all-reduce":
+        factor = 2.0 * ring
+    elif kind == "all-gather":
+        factor = ring
+    elif kind == "reduce-scatter":
+        factor = float(g - 1)
+    elif kind == "all-to-all":
+        factor = ring
+    else:
+        factor = 1.0
+    st.bytes_by_kind[kind] = st.bytes_by_kind.get(kind, 0.0) + size * factor * mult
+    st.count_by_kind[kind] = st.count_by_kind.get(kind, 0) + int(mult)
+    st.f32_bytes += size_f32 * factor * mult
+
+
+def analyze(text: str) -> HloCosts:
+    comps, entry = parse_module(text)
+    costs = HloCosts()
+    if entry is None:
+        # fall back: look for a computation named like main
+        entry = next((n for n in comps if n.startswith("main")), None)
+        if entry is None and comps:
+            entry = max(comps.values(), key=lambda c: len(c.instrs)).name
+    seen_stack: List[str] = []
+
+    def visit(name: str, mult: float) -> None:
+        comp = comps.get(name)
+        if comp is None or name in seen_stack:
+            return
+        seen_stack.append(name)
+        for ins in comp.instrs:
+            op = ins.opcode
+            base = op[:-6] if op.endswith("-start") else op
+            if base in COLLECTIVES:
+                _collective_line(base, ins, mult, costs.collectives)
+            elif op == "dot":
+                costs.flops += _dot_flops(ins, comp.shapes) * mult
+            elif op == "while":
+                cond = _COND_RE.search(ins.line)
+                body = _BODY_RE.search(ins.line)
+                trips = 1
+                if cond and cond.group(1) in comps:
+                    trips = _trip_count(comps[cond.group(1)])
+                costs.n_while += 1
+                costs.trip_counts.append(trips)
+                if body:
+                    visit(body.group(1), mult * trips)
+            elif op == "fusion":
+                m = _CALLS_RE.search(ins.line)
+                if m:
+                    visit(m.group(1), mult)
+            elif op in ("call", "custom-call", "reduce", "sort", "scatter",
+                        "map", "reduce-window", "select-and-scatter"):
+                m = _TO_APPLY_RE.search(ins.line)
+                if m:
+                    visit(m.group(1), mult)
+                if op == "reduce":
+                    costs.elemwise_flops += _shape_elems(ins.ty) * mult
+            elif op == "conditional":
+                m = _BRANCHES_RE.search(ins.line)
+                if m:
+                    for b in _OPERANDS_RE.findall(m.group(1)):
+                        visit(b, mult)
+            elif op in _ELEMWISE:
+                costs.elemwise_flops += _shape_elems(ins.ty) * mult
+        seen_stack.pop()
+
+    if entry:
+        visit(entry, 1.0)
+    return costs

@@ -1,0 +1,39 @@
+"""Production meshes.
+
+``make_production_mesh`` is a function (not a module-level constant) so that
+importing this module never touches jax device state; callers that need the
+512-placeholder-device dry-run must set ``XLA_FLAGS`` before *any* jax
+import (see ``launch/dryrun.py``).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    """16×16 chips per pod; the multi-pod mesh prepends a 2-pod axis.
+
+    With the dry-run's 512 placeholder devices the single-pod mesh uses the
+    first 256 (one pod's worth), so both meshes are constructible in one
+    process.
+    """
+    import numpy as np
+
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devs = jax.devices()
+    if len(devs) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, have {len(devs)} — the "
+            "dry-run entrypoint must set XLA_FLAGS=--xla_force_host_platform_"
+            "device_count=512 before any jax import"
+        )
+    return jax.sharding.Mesh(np.asarray(devs[:n]).reshape(shape), axes)
+
+
+def make_host_mesh(model: int = 1) -> jax.sharding.Mesh:
+    """Tiny mesh over however many (real) devices exist — smoke tests."""
+    n = jax.device_count()
+    model = min(model, n)
+    return jax.make_mesh((n // model, model), ("data", "model"))

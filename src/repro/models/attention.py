@@ -1,0 +1,331 @@
+"""Attention mixers: GQA (causal / bidirectional / sliding-window), MLA.
+
+All functions are pure; KV caches are explicit pytrees threaded by the
+caller.  Three entry points per mixer:
+
+* ``*_train``   — full-sequence forward (no cache), used by train steps and
+  encoder forwards;
+* ``*_prefill`` — full-sequence forward that also returns the populated cache;
+* ``*_decode``  — single-token step consuming/updating the cache.
+
+The inner attention product dispatches to the Pallas flash kernel on TPU
+(``repro.kernels.flash_attention``) and to the fused-mask jnp reference on
+other backends (and always under ``interpret`` tests).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, apply_rope, rms_norm
+
+NEG_INF = -0.7 * float(jnp.finfo(jnp.float32).max)
+
+
+def _cache_update(buf: jax.Array, new: jax.Array, index) -> jax.Array:
+    """Write ``new`` into the seq axis (1) at scalar or per-row ``index``."""
+    new = new.astype(buf.dtype)
+    if jnp.ndim(index) == 0:
+        return jax.lax.dynamic_update_slice_in_dim(buf, new, index, axis=1)
+    return jax.vmap(
+        lambda c, n, i: jax.lax.dynamic_update_slice_in_dim(c, n, i, axis=0)
+    )(buf, new, index.astype(jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# Masking
+# ---------------------------------------------------------------------------
+
+def attn_mask(
+    q_pos: jax.Array,            # [B, Sq] absolute positions of the queries
+    kv_pos: jax.Array,           # [B, Skv]
+    causal: bool,
+    sliding_window: Optional[int],
+) -> jax.Array:
+    """Boolean [B, Sq, Skv] mask (True = attend)."""
+    dq = q_pos[:, :, None]
+    dk = kv_pos[:, None, :]
+    m = jnp.ones((q_pos.shape[0], q_pos.shape[1], kv_pos.shape[1]), bool)
+    if causal:
+        m &= dk <= dq
+    if sliding_window is not None:
+        m &= dk > dq - sliding_window
+    return m
+
+
+def _sdpa_ref(
+    q: jax.Array,                # [B, Sq, Hq, D]
+    k: jax.Array,                # [B, Skv, Hkv, D]
+    v: jax.Array,                # [B, Skv, Hkv, Dv]
+    mask: jax.Array,             # [B, Sq, Skv] bool
+    scale: float,
+    logit_softcap: float = 0.0,
+) -> jax.Array:
+    """Pure-jnp grouped-query attention (the oracle path)."""
+    b, sq, hq, d = q.shape
+    hkv = k.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, sq, hkv, g, d)
+    logits = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if logit_softcap > 0:
+        logits = logit_softcap * jnp.tanh(logits / logit_softcap)
+    logits = jnp.where(mask[:, None, None, :, :], logits, NEG_INF)
+    p = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32))
+    return out.reshape(b, sq, hq, v.shape[-1]).astype(q.dtype)
+
+
+def sdpa(
+    q, k, v, *,
+    q_positions: jax.Array,
+    kv_positions: jax.Array,
+    causal: bool,
+    sliding_window: Optional[int] = None,
+    logit_softcap: float = 0.0,
+    scale: Optional[float] = None,
+    use_kernel: str = "auto",
+) -> jax.Array:
+    """Scaled dot-product attention with GQA + optional flash kernel."""
+    scale = scale if scale is not None else q.shape[-1] ** -0.5
+    if use_kernel == "auto":
+        use_kernel = "pallas" if jax.default_backend() == "tpu" else "ref"
+    if use_kernel == "pallas" and q.shape[1] > 1:
+        from repro.kernels import flash_attention as fa
+
+        return fa.flash_attention(
+            q, k, v,
+            q_positions=q_positions, kv_positions=kv_positions,
+            causal=causal, sliding_window=sliding_window,
+            logit_softcap=logit_softcap, scale=scale,
+        )
+    mask = attn_mask(q_positions, kv_positions, causal, sliding_window)
+    return _sdpa_ref(q, k, v, mask, scale, logit_softcap)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention layer
+# ---------------------------------------------------------------------------
+
+def _split_heads(x: jax.Array, n_heads: int) -> jax.Array:
+    b, s, _ = x.shape
+    return x.reshape(b, s, n_heads, -1)
+
+
+def gqa_project_qkv(
+    p: Dict[str, jax.Array],
+    x: jax.Array,                  # [B, S, d]
+    cfg: ModelConfig,
+    positions: jax.Array,          # [B, S] or [3, B, S]
+    rope_theta: float,
+) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    q = _split_heads(x @ p["wq"], cfg.n_heads)
+    k = _split_heads(x @ p["wk"], cfg.n_kv_heads)
+    v = _split_heads(x @ p["wv"], cfg.n_kv_heads)
+    if cfg.use_qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps, gemma=cfg.gemma_norm)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps, gemma=cfg.gemma_norm)
+    q = apply_rope(q, positions, rope_theta, cfg.partial_rotary, cfg.mrope_sections)
+    k = apply_rope(k, positions, rope_theta, cfg.partial_rotary, cfg.mrope_sections)
+    return q, k, v
+
+
+def gqa_attention(
+    p: Dict[str, jax.Array],
+    x: jax.Array,
+    cfg: ModelConfig,
+    positions: jax.Array,
+    *,
+    is_global: bool = True,
+    cache: Optional[Dict[str, jax.Array]] = None,
+    cache_index: Optional[jax.Array] = None,
+    return_cache: bool = False,
+    use_kernel: str = "auto",
+    ctx=None,
+) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    """One GQA attention block (no residual / norm — the caller owns those).
+
+    ``cache`` (decode/prefill): dict(k=[B, S_max, Hkv, D], v=...).  In decode,
+    ``x`` is [B, 1, d] and ``cache_index`` is the write offset.
+
+    When the head count does not divide the model mesh axis (e.g. 24 heads
+    on a 16-way axis), head TP is impossible without splitting head_dim —
+    which GSPMD resolves by all-reducing the full [S, S] score matrix.
+    Instead we switch to *sequence-parallel attention*: the query sequence
+    dim is sharded over the model axis (k/v stay whole), so the quadratic
+    score work is partitioned with only O(S·d)-sized gathers.
+    """
+    theta = cfg.rope_theta
+    window = None
+    if not is_global and cfg.sliding_window is not None:
+        window = cfg.sliding_window
+    elif is_global and cfg.rope_theta_global is not None:
+        theta = cfg.rope_theta_global
+
+    q, k, v = gqa_project_qkv(p, x, cfg, positions, theta)
+    q_pos = positions[0] if positions.ndim == 3 else positions
+
+    seq_parallel = (
+        ctx is not None and ctx.mesh is not None and x.shape[1] > 1
+        and cfg.n_heads % ctx.model_size != 0
+        and x.shape[1] % ctx.model_size == 0
+    )
+    if seq_parallel:
+        q = ctx.shard_act(q, ctx.batch_axes, ctx.model_axis, None, None)
+        k = ctx.shard_act(k, ctx.batch_axes, None, None, None)
+        v = ctx.shard_act(v, ctx.batch_axes, None, None, None)
+
+    new_cache = None
+    if cache is not None and cache_index is not None:
+        # decode: append to the cache ring.  cache_index is a scalar (all
+        # sequences aligned) or a [B] vector (continuous batching).
+        b = x.shape[0]
+        k_all = _cache_update(cache["k"], k, cache_index)
+        v_all = _cache_update(cache["v"], v, cache_index)
+        if return_cache:
+            new_cache = {"k": k_all, "v": v_all}
+        kv_pos = jnp.arange(cache["k"].shape[1], dtype=jnp.int32)[None, :]
+        kv_pos = jnp.broadcast_to(kv_pos, (b, cache["k"].shape[1]))
+        # entries beyond the current write point are invalid -> mask via pos
+        valid_upto = cache_index + x.shape[1]
+        if jnp.ndim(valid_upto) == 1:
+            valid_upto = valid_upto[:, None]
+        kv_pos = jnp.where(kv_pos < valid_upto, kv_pos, jnp.int32(2**30))
+        out = sdpa(
+            q, k_all, v_all,
+            q_positions=q_pos, kv_positions=kv_pos,
+            causal=cfg.causal, sliding_window=window,
+            logit_softcap=0.0, use_kernel=use_kernel,
+        )
+    else:
+        if return_cache:
+            new_cache = {"k": k, "v": v}
+        out = sdpa(
+            q, k, v,
+            q_positions=q_pos, kv_positions=q_pos,
+            causal=cfg.causal, sliding_window=window,
+            logit_softcap=0.0, use_kernel=use_kernel,
+        )
+    b, s = x.shape[:2]
+    out = out.reshape(b, s, -1)
+    if seq_parallel:
+        # the output projection is row-local on the S-sharded activations;
+        # GSPMD re-gathers S at the residual boundary (Megatron-SP style)
+        out = ctx.shard_act(out, ctx.batch_axes, ctx.model_axis, None)
+    return out @ p["wo"], new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA — DeepSeek-V2 multi-head latent attention
+# ---------------------------------------------------------------------------
+#
+# The KV cache stores only the compressed latent c_kv [B, S, kv_lora] and the
+# decoupled rope key k_pe [B, S, rope_dim] — 576 values/token/layer — which is
+# the paper-exact memory saving that makes 500k-token decode shardable.
+
+def mla_attention(
+    p: Dict[str, jax.Array],
+    x: jax.Array,
+    cfg: ModelConfig,
+    positions: jax.Array,
+    *,
+    cache: Optional[Dict[str, jax.Array]] = None,
+    cache_index: Optional[jax.Array] = None,
+    return_cache: bool = False,
+    use_kernel: str = "auto",
+    is_global: bool = True,
+) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
+    m = cfg.mla
+    b, s, _ = x.shape
+    h = cfg.n_heads
+    qk_dim = m.qk_nope_head_dim + m.qk_rope_head_dim
+
+    # --- queries (low-rank) -------------------------------------------------
+    cq = rms_norm(x @ p["wq_a"], p["q_norm"], cfg.norm_eps)
+    q = (cq @ p["wq_b"]).reshape(b, s, h, qk_dim)
+    q_nope, q_pe = q[..., : m.qk_nope_head_dim], q[..., m.qk_nope_head_dim:]
+    q_pe = apply_rope(q_pe, positions, cfg.rope_theta)
+
+    # --- compressed KV latent ------------------------------------------------
+    ckv_full = x @ p["wkv_a"]                              # [B,S,kv_lora+rope]
+    c_kv = rms_norm(ckv_full[..., : m.kv_lora_rank], p["kv_norm"], cfg.norm_eps)
+    k_pe = apply_rope(ckv_full[..., None, m.kv_lora_rank:], positions, cfg.rope_theta)
+    k_pe = k_pe[..., 0, :]                                 # [B,S,rope_dim]
+
+    q_pos = positions[0] if positions.ndim == 3 else positions
+    if cache is not None and cache_index is not None:
+        c_all = _cache_update(cache["c_kv"], c_kv, cache_index)
+        pe_all = _cache_update(cache["k_pe"], k_pe, cache_index)
+        if return_cache:
+            new_cache = {"c_kv": c_all, "k_pe": pe_all}
+        else:
+            new_cache = None
+        skv = c_all.shape[1]
+        kv_pos = jnp.broadcast_to(jnp.arange(skv, dtype=jnp.int32)[None, :], (b, skv))
+        valid_upto = cache_index + s
+        if jnp.ndim(valid_upto) == 1:
+            valid_upto = valid_upto[:, None]
+        kv_pos = jnp.where(kv_pos < valid_upto, kv_pos, jnp.int32(2**30))
+        c_kv_use, k_pe_use = c_all, pe_all
+    else:
+        new_cache = {"c_kv": c_kv, "k_pe": k_pe} if return_cache else None
+        skv = s
+        kv_pos = q_pos
+        c_kv_use, k_pe_use = c_kv, k_pe
+
+    # --- expand latent to per-head K/V (absorbed form for decode) -----------
+    wkv_b = p["wkv_b"].reshape(m.kv_lora_rank, h, m.qk_nope_head_dim + m.v_head_dim)
+    w_k = wkv_b[..., : m.qk_nope_head_dim]                 # [r, h, dk]
+    w_v = wkv_b[..., m.qk_nope_head_dim:]                  # [r, h, dv]
+    scale = qk_dim ** -0.5
+    if s == 1 and cache is not None:
+        # decode: absorb w_k into the query -> score directly in latent space,
+        # never materializing [B, Skv, h, dk].  FLOPs/token: h*(dk*r + r) per
+        # key instead of expanding the whole cache.
+        q_lat = jnp.einsum("bqhd,rhd->bqhr", q_nope.astype(jnp.float32), w_k.astype(jnp.float32))
+        logits = jnp.einsum("bqhr,bkr->bhqk", q_lat, c_kv_use.astype(jnp.float32))
+        logits += jnp.einsum("bqhd,bkd->bhqk", q_pe.astype(jnp.float32),
+                             k_pe_use.astype(jnp.float32))
+        logits *= scale
+        mask = attn_mask(q_pos, kv_pos, cfg.causal, None)
+        logits = jnp.where(mask[:, None, :, :], logits, NEG_INF)
+        pr = jax.nn.softmax(logits, axis=-1)
+        ctx_lat = jnp.einsum("bhqk,bkr->bqhr", pr, c_kv_use.astype(jnp.float32))
+        out = jnp.einsum("bqhr,rhd->bqhd", ctx_lat, w_v.astype(jnp.float32)).astype(x.dtype)
+    else:
+        k_nope = jnp.einsum("bkr,rhd->bkhd", c_kv_use, w_k.astype(c_kv_use.dtype))
+        v_full = jnp.einsum("bkr,rhd->bkhd", c_kv_use, w_v.astype(c_kv_use.dtype))
+        k_full = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_pe_use[:, :, None, :], (b, skv, h, m.qk_rope_head_dim))],
+            axis=-1,
+        )
+        q_full = jnp.concatenate([q_nope, q_pe], axis=-1)
+        out = sdpa(
+            q_full, k_full, v_full,
+            q_positions=q_pos, kv_positions=kv_pos,
+            causal=cfg.causal, sliding_window=None,
+            scale=scale, use_kernel=use_kernel,
+        )
+    return out.reshape(b, s, -1) @ p["wo"], new_cache
+
+
+# ---------------------------------------------------------------------------
+# Cache allocation
+# ---------------------------------------------------------------------------
+
+def init_attn_cache(cfg: ModelConfig, batch: int, max_len: int, dtype) -> Dict[str, Any]:
+    """Zeroed per-layer cache entry for one attention layer."""
+    if cfg.mla is not None:
+        m = cfg.mla
+        return {
+            "c_kv": jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
+            "k_pe": jnp.zeros((batch, max_len, m.qk_rope_head_dim), dtype),
+        }
+    return {
+        "k": jnp.zeros((batch, max_len, cfg.n_kv_heads, cfg.head_dim), dtype),
+        "v": jnp.zeros((batch, max_len, cfg.n_kv_heads, cfg.head_dim), dtype),
+    }

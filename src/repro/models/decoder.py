@@ -1,0 +1,390 @@
+"""Composable decoder/encoder stack: train forward, prefill and decode.
+
+The stack is prefix (unrolled) + body (``lax.scan`` over stacked layer
+groups) + suffix (unrolled), per :func:`repro.models.common.layer_plan`.
+Every apply is a pure function of ``(params, batch)``; distribution comes
+from a :class:`RunCtx` carrying the mesh and axis names (None = single
+device, used by smoke tests).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .attention import gqa_attention, init_attn_cache, mla_attention
+from .common import (LayerKind, LayerPlan, ModelConfig, layer_plan, mlp_apply,
+                     param_shapes, rms_norm)
+from .moe import moe_apply
+from .ssm import init_ssm_cache, mamba2_block
+
+
+@dataclass(frozen=True)
+class RunCtx:
+    """Execution context: mesh, axis names, kernel/remat policy."""
+
+    mesh: Optional[jax.sharding.Mesh] = None
+    batch_axes: Tuple[str, ...] = ("data",)
+    model_axis: str = "model"
+    use_kernel: str = "auto"          # "auto" | "pallas" | "ref"
+    remat: str = "none"               # "none" | "full" | "dots"
+    capacity_factor: float = 1.25
+    seq_axis: Optional[str] = None    # shard long KV caches over this axis
+
+    @property
+    def model_size(self) -> int:
+        if self.mesh is None:
+            return 1
+        return int(self.mesh.shape[self.model_axis])
+
+    def shard_act(self, x: jax.Array, *spec) -> jax.Array:
+        if self.mesh is None:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, jax.sharding.NamedSharding(self.mesh, P(*spec))
+        )
+
+
+# ---------------------------------------------------------------------------
+# One block
+# ---------------------------------------------------------------------------
+
+def block_apply(
+    cfg: ModelConfig,
+    ctx: RunCtx,
+    kind: LayerKind,
+    p: Dict[str, Any],
+    shared_attn_p: Optional[Dict[str, Any]],
+    x: jax.Array,
+    positions: jax.Array,
+    *,
+    cache: Optional[Dict[str, Any]] = None,
+    cache_index: Optional[jax.Array] = None,
+    return_cache: bool = False,
+) -> Tuple[jax.Array, Dict[str, Any]]:
+    eps, gm = cfg.norm_eps, cfg.gemma_norm
+    # params may be stored fp32 (training master copies); compute in cfg.dtype
+    cdt = cfg.compute_dtype()
+    cast = lambda t: jax.tree.map(
+        lambda a: a.astype(cdt) if jnp.issubdtype(a.dtype, jnp.floating) else a, t
+    )
+    p = cast(p)
+    if shared_attn_p is not None:
+        shared_attn_p = cast(shared_attn_p)
+    new_cache: Dict[str, Any] = {}
+    attn_kw = dict(
+        cache=None if cache is None else cache.get("attn"),
+        cache_index=cache_index,
+        return_cache=return_cache,
+        use_kernel=ctx.use_kernel,
+    )
+
+    if kind.mixer in ("attn", "attn_local"):
+        h = rms_norm(x, p["ln_attn"], eps, gemma=gm)
+        if cfg.mla is not None:
+            fn = mla_attention
+        else:
+            fn = gqa_attention
+            attn_kw["ctx"] = ctx
+        a, c = fn(p["attn"], h, cfg, positions,
+                  is_global=(kind.mixer == "attn"), **attn_kw)
+        if gm and "ln_post_attn" in p:
+            a = rms_norm(a, p["ln_post_attn"], eps, gemma=gm)
+        x = x + a
+        if return_cache:
+            new_cache["attn"] = c
+    elif kind.mixer == "shared_attn":
+        h = rms_norm(x, shared_attn_p["ln_attn"], eps, gemma=gm)
+        a, c = gqa_attention(shared_attn_p["attn"], h, cfg, positions,
+                             is_global=True, **attn_kw)
+        x = x + a
+        if return_cache:
+            new_cache["attn"] = c
+    elif kind.mixer == "mamba":
+        h = rms_norm(x, p["ln_mix"], eps, gemma=gm)
+        y, c = mamba2_block(
+            p["mamba"], h, cfg,
+            cache=None if cache is None else cache.get("mamba"),
+            return_cache=return_cache,
+            use_kernel=ctx.use_kernel,
+        )
+        x = x + y
+        if return_cache:
+            new_cache["mamba"] = c
+    else:
+        raise ValueError(kind.mixer)
+
+    if kind.ffn == "dense":
+        h = rms_norm(x, p["ln_mlp"], eps, gemma=gm)
+        f = mlp_apply(p["mlp"], h, cfg.mlp_act)
+        if gm and "ln_post_mlp" in p:
+            f = rms_norm(f, p["ln_post_mlp"], eps, gemma=gm)
+        x = x + f
+    elif kind.ffn == "moe":
+        h = rms_norm(x, p["ln_mlp"], eps, gemma=gm)
+        x = x + moe_apply(
+            p["moe"], h, cfg, mesh=ctx.mesh,
+            batch_axes=ctx.batch_axes, model_axis=ctx.model_axis,
+            capacity_factor=ctx.capacity_factor,
+        )
+    x = ctx.shard_act(x, ctx.batch_axes, None, None)
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Stack
+# ---------------------------------------------------------------------------
+
+def _remat_wrap(fn, remat: str):
+    if remat == "none":
+        return fn
+    if remat == "full":
+        return jax.checkpoint(fn)
+    if remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+    raise ValueError(remat)
+
+
+def _unrolled_names(params_sub: Dict[str, Any]) -> list:
+    return sorted(params_sub, key=lambda s: int(s.removeprefix("layer")))
+
+
+def stack_apply(
+    cfg: ModelConfig,
+    ctx: RunCtx,
+    params: Dict[str, Any],
+    x: jax.Array,
+    positions: jax.Array,
+    *,
+    caches: Optional[Dict[str, Any]] = None,
+    cache_index: Optional[jax.Array] = None,
+    return_cache: bool = False,
+) -> Tuple[jax.Array, Optional[Dict[str, Any]]]:
+    plan = layer_plan(cfg)
+    kinds = plan.kinds
+    shared_p = params.get("shared_attn")
+    new_caches: Dict[str, Any] = {"prefix": [], "body": None, "suffix": []}
+
+    def one(kind, p, xx, cc):
+        return block_apply(
+            cfg, ctx, kind, p, shared_p, xx, positions,
+            cache=cc, cache_index=cache_index, return_cache=return_cache,
+        )
+
+    # --- prefix (unrolled) ---------------------------------------------------
+    if plan.prefix:
+        for i, name in enumerate(_unrolled_names(params["prefix"])):
+            cc = caches["prefix"][i] if caches is not None else None
+            x, nc = one(kinds[i], params["prefix"][name], x, cc)
+            new_caches["prefix"].append(nc)
+
+    # --- body (scanned over groups) -------------------------------------------
+    if plan.n_groups:
+        def group_body(xx, scanned):
+            gp, gc = scanned
+            ncs = []
+            for j in range(plan.period):
+                cc = None if gc is None else gc[j]
+                xx, nc = one(kinds[plan.prefix + j], gp[f"pos{j}"], xx, cc)
+                ncs.append(nc)
+            return xx, ncs
+
+        group_fn = _remat_wrap(group_body, ctx.remat)
+        body_caches = caches["body"] if caches is not None else None
+        if body_caches is None:
+            body_caches_xs = [None] * plan.period
+            xs = (params["blocks"], None)
+
+            def scan_fn(xx, gp):
+                xx, ncs = group_fn(xx, (gp, None))
+                return xx, ncs if return_cache else None
+
+            x, ys = jax.lax.scan(scan_fn, x, params["blocks"])
+        else:
+            def scan_fn(xx, scanned):
+                xx, ncs = group_fn(xx, scanned)
+                return xx, ncs if return_cache else None
+
+            x, ys = jax.lax.scan(scan_fn, x, (params["blocks"], body_caches))
+        new_caches["body"] = ys
+
+    # --- suffix (unrolled) ------------------------------------------------------
+    if plan.suffix:
+        for i, name in enumerate(_unrolled_names(params["suffix"])):
+            li = plan.suffix_start + i
+            cc = caches["suffix"][i] if caches is not None else None
+            x, nc = one(kinds[li], params["suffix"][name], x, cc)
+            new_caches["suffix"].append(nc)
+
+    return x, (new_caches if return_cache else None)
+
+
+# ---------------------------------------------------------------------------
+# Model-level entry points
+# ---------------------------------------------------------------------------
+
+def embed_in(cfg: ModelConfig, params, batch: Dict[str, jax.Array]) -> jax.Array:
+    """Token ids -> embeddings, or pass through stub-frontend features."""
+    if "embeds" in batch:
+        x = batch["embeds"].astype(jnp.dtype(cfg.dtype))
+    else:
+        x = jnp.take(params["embed"], batch["tokens"], axis=0).astype(jnp.dtype(cfg.dtype))
+    if cfg.gemma_norm:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    return x
+
+
+def lm_logits(cfg: ModelConfig, ctx: RunCtx, params, x: jax.Array) -> jax.Array:
+    x = rms_norm(x, params["final_norm"].astype(x.dtype), cfg.norm_eps,
+                 gemma=cfg.gemma_norm)
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x @ head.astype(x.dtype)
+    if cfg.logit_softcap > 0:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    return logits
+
+
+def forward(
+    cfg: ModelConfig,
+    ctx: RunCtx,
+    params: Dict[str, Any],
+    batch: Dict[str, jax.Array],
+) -> jax.Array:
+    """Full-sequence forward -> logits [B, S, V]."""
+    x = embed_in(cfg, params, batch)
+    x = ctx.shard_act(x, ctx.batch_axes, None, None)
+    positions = batch.get("positions")
+    if positions is None:
+        b, s = x.shape[:2]
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    x, _ = stack_apply(cfg, ctx, params, x, positions)
+    return lm_logits(cfg, ctx, params, x)
+
+
+def loss_fn(
+    cfg: ModelConfig,
+    ctx: RunCtx,
+    params: Dict[str, Any],
+    batch: Dict[str, jax.Array],
+) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Mean next-token (or masked-frame) cross entropy; labels < 0 ignored."""
+    logits = forward(cfg, ctx, params, batch).astype(jnp.float32)
+    labels = batch["labels"]
+    mask = (labels >= 0).astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[..., None], axis=-1
+    )[..., 0]
+    nll = (lse - picked) * mask
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    loss = jnp.sum(nll) / denom
+    return loss, {"loss": loss, "ntokens": jnp.sum(mask)}
+
+
+# ---------------------------------------------------------------------------
+# Caches: allocation + prefill + decode
+# ---------------------------------------------------------------------------
+
+def _layer_cache(cfg: ModelConfig, kind: LayerKind, batch: int, max_len: int, dtype):
+    if kind.mixer in ("attn", "attn_local", "shared_attn"):
+        win = cfg.sliding_window
+        ln = max_len
+        if kind.mixer == "attn_local" and win is not None:
+            ln = min(max_len, win)  # ring-capped local cache (allocated full
+            # here for simplicity of positions; engine may cap)
+            ln = max_len
+        return {"attn": init_attn_cache(cfg, batch, ln, dtype)}
+    if kind.mixer == "mamba":
+        return {"mamba": init_ssm_cache(cfg, batch, dtype)}
+    raise ValueError(kind.mixer)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int, dtype=jnp.bfloat16):
+    plan = layer_plan(cfg)
+    kinds = plan.kinds
+    out: Dict[str, Any] = {"prefix": [], "body": None, "suffix": []}
+    for i in range(plan.prefix):
+        out["prefix"].append(_layer_cache(cfg, kinds[i], batch, max_len, dtype))
+    if plan.n_groups:
+        body = []
+        for j in range(plan.period):
+            one = _layer_cache(cfg, kinds[plan.prefix + j], batch, max_len, dtype)
+            body.append(jax.tree.map(
+                lambda a: jnp.broadcast_to(a[None], (plan.n_groups,) + a.shape).copy()
+                if False else jnp.zeros((plan.n_groups,) + a.shape, a.dtype),
+                one,
+            ))
+        out["body"] = body
+    for i in range(plan.suffix):
+        out["suffix"].append(
+            _layer_cache(cfg, kinds[plan.suffix_start + i], batch, max_len, dtype)
+        )
+    return out
+
+
+def prefill(
+    cfg: ModelConfig,
+    ctx: RunCtx,
+    params: Dict[str, Any],
+    batch: Dict[str, jax.Array],
+    max_len: Optional[int] = None,
+) -> Tuple[jax.Array, Dict[str, Any]]:
+    """Run the prompt, return (last-position logits [B, V], cache).
+
+    The returned cache holds exactly the prompt (length S); the serving
+    engine pads/relocates it into its ring buffers.
+    """
+    x = embed_in(cfg, params, batch)
+    x = ctx.shard_act(x, ctx.batch_axes, None, None)
+    positions = batch.get("positions")
+    if positions is None:
+        b, s = x.shape[:2]
+        positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    x, caches = stack_apply(
+        cfg, ctx, params, x, positions, return_cache=True
+    )
+    logits = lm_logits(cfg, ctx, params, x[:, -1:, :])
+    return logits[:, 0, :], caches
+
+
+def decode_step(
+    cfg: ModelConfig,
+    ctx: RunCtx,
+    params: Dict[str, Any],
+    caches: Dict[str, Any],
+    tokens: jax.Array,           # [B] int32 (or embeds [B, 1, d])
+    pos: jax.Array,              # () or [B] int32 — write position(s)
+) -> Tuple[jax.Array, Dict[str, Any]]:
+    """One autoregressive step over a pre-allocated cache; returns logits [B, V].
+
+    A scalar ``pos`` steps all sequences in lockstep; a ``[B]`` vector is
+    the continuous-batching path (each session at its own depth).
+    """
+    if tokens.ndim == 1:
+        x = jnp.take(params["embed"], tokens[:, None], axis=0).astype(jnp.dtype(cfg.dtype))
+        if cfg.gemma_norm:
+            x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    else:
+        x = tokens.astype(jnp.dtype(cfg.dtype))
+    b = x.shape[0]
+    pos = jnp.asarray(pos, jnp.int32)
+    if pos.ndim == 0:
+        positions = jnp.broadcast_to(pos[None, None], (b, 1))
+    else:
+        positions = pos[:, None]
+    if cfg.mrope_sections is not None:
+        positions = jnp.broadcast_to(positions[None], (3, b, 1))
+    x, new_caches = stack_apply(
+        cfg, ctx, params, x, positions,
+        caches=caches, cache_index=pos, return_cache=True,
+    )
+    logits = lm_logits(cfg, ctx, params, x)
+    return logits[:, 0, :], new_caches

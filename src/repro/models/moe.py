@@ -1,0 +1,263 @@
+"""Mixture-of-Experts FFN: reference routing + sharded EP/TP execution.
+
+Two execution paths with identical math:
+
+* :func:`moe_ref` — per-expert dense masking, exact top-k, no capacity drops.
+  Used by smoke tests / single-device runs and as the oracle.
+* :func:`moe_sharded` — `shard_map` over the ``model`` mesh axis.  Expert
+  weights are laid out in *chunks*: the model axis is split into
+  ``ep × tp`` (ep = expert parallelism, tp = tensor parallelism inside an
+  expert) so any expert count works on any axis size (mixtral: 8 experts ×
+  f/2 halves on 16 devices; deepseek-v2: 10 experts/device).  Tokens are
+  replicated across the model axis (as in TP dense FFN), so *dispatch is a
+  local gather* on each expert owner and *combine is the single
+  psum(model)* that TP needs anyway — no all_to_all, no cross-device
+  dispatch tensor.  Capacity-factor token dropping bounds the gather size.
+
+This dispatch-free formulation is the "migrate work to the state owner"
+choice of the paper's cost model applied inside one step: tokens (work)
+visit the expert shard (state owner) by *being already there* (replication
+over the model axis), while the alternative — all_gathering expert weights
+to the tokens — is the "migrate state" branch.  `repro.dist.locality`
+prices both with the paper's SC cost formula.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from .common import ModelConfig, chunk_plan, mlp_apply
+
+
+# ---------------------------------------------------------------------------
+# Routing
+# ---------------------------------------------------------------------------
+
+def router_topk(
+    logits: jax.Array,            # [T, E] float32
+    top_k: int,
+    norm_topk: bool,
+    router_scale: float,
+) -> Tuple[jax.Array, jax.Array]:
+    """Return (gate values [T, K] float32, expert ids [T, K] int32)."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    vals, ids = jax.lax.top_k(probs, top_k)
+    if norm_topk:
+        vals = vals / jnp.maximum(jnp.sum(vals, axis=-1, keepdims=True), 1e-9)
+    return vals * router_scale, ids.astype(jnp.int32)
+
+
+def aux_load_balance_loss(logits: jax.Array, ids: jax.Array, n_experts: int) -> jax.Array:
+    """Switch-style load-balance auxiliary loss (mean prob × token fraction)."""
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    me = jnp.mean(probs, axis=0)                                    # [E]
+    onehot = jax.nn.one_hot(ids[..., 0], n_experts, dtype=jnp.float32)
+    ce = jnp.mean(onehot, axis=0)
+    return n_experts * jnp.sum(me * ce)
+
+
+# ---------------------------------------------------------------------------
+# Reference path (oracle; exact, no drops)
+# ---------------------------------------------------------------------------
+
+def moe_ref(p: Dict[str, Any], x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """[B, S, d] -> [B, S, d]; loops over experts with dense masks.
+
+    Expert weights are in the chunked layout with n_chunks=1:
+    ``experts.w_gate [1, E, d, f]`` etc.
+    """
+    m = cfg.moe
+    b, s, d = x.shape
+    xt = x.reshape(-1, d)
+    logits = xt.astype(jnp.float32) @ p["router"].astype(jnp.float32)
+    gates, ids = router_topk(logits, m.top_k, norm_topk=(m.n_shared == 0),
+                             router_scale=m.router_scale)
+    out = jnp.zeros_like(xt, dtype=jnp.float32)
+    we = p["experts"]
+    for e in range(m.n_experts):
+        w = jnp.sum(jnp.where(ids == e, gates, 0.0), axis=-1)       # [T]
+        h = jax.nn.silu(xt @ we["w_gate"][0, e]) * (xt @ we["w_up"][0, e])
+        out = out + (h @ we["w_down"][0, e]).astype(jnp.float32) * w[:, None]
+    y = out.astype(x.dtype)
+    if m.n_shared:
+        y = y + mlp_apply(p["shared"], xt, "swiglu")
+    return y.reshape(b, s, d)
+
+
+# ---------------------------------------------------------------------------
+# Chunked expert weight layout (EP × TP over the model axis)
+# ---------------------------------------------------------------------------
+
+def to_chunked(w_gate, w_up, w_down, model_size: int):
+    """[E, d, f] expert weights -> chunked [n_chunks, n_e, d, f_c] layout.
+
+    Chunk m holds experts ``(m // tp) * n_e + [0, n_e)`` restricted to
+    f-slice ``m % tp``.
+    """
+    e, d, f = w_gate.shape
+    ep, tp, n_e, nc = chunk_plan(e, model_size)
+    f_c = f // tp
+
+    def slice_chunks(w, transpose=False):
+        # w [E, d, f] -> [ep, n_e, d, tp, f_c] -> [ep, tp, n_e, d, f_c] -> [nc, ...]
+        wr = w.reshape(ep, n_e, d, tp, f_c) if not transpose else None
+        if transpose:  # w_down [E, f, d] -> slice along f
+            wr = w.reshape(ep, n_e, tp, f_c, d)
+            wr = jnp.moveaxis(wr, 2, 1)                     # [ep, tp, n_e, f_c, d]
+            return wr.reshape(nc, n_e, f_c, d)
+        wr = jnp.moveaxis(wr, 3, 1)                         # [ep, tp, n_e, d, f_c]
+        return wr.reshape(nc, n_e, d, f_c)
+
+    return slice_chunks(w_gate), slice_chunks(w_up), slice_chunks(w_down, transpose=True)
+
+
+def chunked_shapes(cfg: ModelConfig, model_size: int) -> Dict[str, Tuple[int, ...]]:
+    m = cfg.moe
+    ep, tp, n_e, nc = chunk_plan(m.n_experts, model_size)
+    f_c = m.d_expert // tp
+    return {
+        "w_gate": (nc, n_e, cfg.d_model, f_c),
+        "w_up": (nc, n_e, cfg.d_model, f_c),
+        "w_down": (nc, n_e, f_c, cfg.d_model),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Sharded path
+# ---------------------------------------------------------------------------
+
+def _moe_local(
+    x_loc: jax.Array,             # [T_loc, d]  (this device's tokens)
+    router: jax.Array,            # [d, E]
+    wg: jax.Array, wu: jax.Array, wd: jax.Array,   # [n_e, d, f_c] / [n_e, f_c, d]
+    *,
+    cfg: ModelConfig,
+    model_axis: str,
+    capacity: int,
+) -> jax.Array:
+    """Per-device body: route, gather my experts' tokens, FFN, scatter, psum."""
+    m = cfg.moe
+    model_size = jax.lax.axis_size(model_axis)
+    ep, tp, n_e, _ = chunk_plan(m.n_experts, model_size)
+    midx = jax.lax.axis_index(model_axis)
+    ep_rank = midx // tp
+
+    t_loc, d = x_loc.shape
+    acc_dt = x_loc.dtype   # accumulate in compute dtype: keeps the backward
+    # cotangent chain (and its psum over the model axis) out of fp32
+    logits = x_loc.astype(jnp.float32) @ router.astype(jnp.float32)
+    gates, ids = router_topk(logits, m.top_k, norm_topk=(m.n_shared == 0),
+                             router_scale=m.router_scale)
+
+    # slot assignment: for each (token, k) choice, its position among all
+    # choices of the same expert (arrival order), for capacity dropping
+    flat_ids = ids.reshape(-1)                               # [T*K]
+    flat_gates = gates.reshape(-1)
+    onehot_pos = jax.nn.one_hot(flat_ids, m.n_experts, dtype=jnp.int32)
+    slot = jnp.cumsum(onehot_pos, axis=0) - onehot_pos       # [T*K, E] slot per expert
+    my_first = ep_rank * n_e
+
+    y = jnp.zeros((t_loc, d), acc_dt)
+    token_of = jnp.arange(t_loc * m.top_k, dtype=jnp.int32) // m.top_k
+    for le in range(n_e):
+        gid = my_first + le
+        sel = flat_ids == gid
+        slot_e = slot[:, gid]
+        keep = sel & (slot_e < capacity)
+        # scatter (token, gate) into the capacity buffer
+        dest = jnp.where(keep, slot_e, capacity)             # drops -> overflow row
+        tok_idx = jnp.full((capacity + 1,), t_loc, jnp.int32).at[dest].set(
+            jnp.where(keep, token_of, t_loc), mode="drop")[:capacity]
+        gate_buf = jnp.zeros((capacity + 1,), jnp.float32).at[dest].set(
+            jnp.where(keep, flat_gates, 0.0), mode="drop")[:capacity]
+        xg = jnp.where(
+            (tok_idx < t_loc)[:, None],
+            jnp.take(x_loc, jnp.minimum(tok_idx, t_loc - 1), axis=0),
+            0.0,
+        )                                                     # [C, d]
+        h = jax.nn.silu(xg @ wg[le]) * (xg @ wu[le])          # [C, f_c]
+        o = (h @ wd[le]) * gate_buf[:, None].astype(acc_dt)
+        y = y.at[jnp.minimum(tok_idx, t_loc - 1)].add(
+            jnp.where((tok_idx < t_loc)[:, None], o, jnp.zeros((), acc_dt)))
+    # one reduction: sums (a) expert contributions across ep ranks and
+    # (b) partial f-slices across tp ranks.  Reduce in compute dtype — a
+    # fp32 psum here doubles the layer's wire bytes for no accuracy gain
+    # (each token sums at most top_k + tp partials).
+    return jax.lax.psum(y, model_axis)
+
+
+def moe_sharded(
+    p: Dict[str, Any],
+    x: jax.Array,                 # [B, S, d]
+    cfg: ModelConfig,
+    mesh: jax.sharding.Mesh,
+    *,
+    batch_axes: Tuple[str, ...] = ("data",),
+    model_axis: str = "model",
+    capacity_factor: float = 1.25,
+) -> jax.Array:
+    """EP/TP MoE over ``mesh``; expert weights must be in chunked layout."""
+    from jax.experimental.shard_map import shard_map
+
+    m = cfg.moe
+    b, s, d = x.shape
+    # shard the batch dim over as many batch axes as divide it; batch==1
+    # (long-context decode) degrades to replication over the batch axes
+    # (each data row computes identical routing; experts stay model-sharded)
+    baxes: Tuple[str, ...] = tuple(batch_axes)
+    while baxes:
+        n = 1
+        for a in baxes:
+            n *= int(mesh.shape[a])
+        if b % n == 0:
+            break
+        baxes = baxes[1:]
+    n_batch_shards = 1
+    for a in baxes:
+        n_batch_shards *= int(mesh.shape[a])
+    t_loc = (b // n_batch_shards) * s
+    model_size = mesh.shape[model_axis]
+    capacity = int(max(1, t_loc * m.top_k * capacity_factor) // m.n_experts)
+    capacity = max(capacity, 8)
+
+    def body(x_blk, router, wg, wu, wd):
+        bl, sl, dl = x_blk.shape
+        y = _moe_local(
+            x_blk.reshape(-1, dl), router, wg[0], wu[0], wd[0],
+            cfg=cfg, model_axis=model_axis, capacity=capacity,
+        )
+        return y.reshape(bl, sl, dl).astype(x_blk.dtype)
+
+    bspec = P(baxes if baxes else None, None, None)
+    out = shard_map(
+        body, mesh=mesh,
+        in_specs=(
+            bspec,
+            P(None, None),
+            P(model_axis, None, None, None),
+            P(model_axis, None, None, None),
+            P(model_axis, None, None, None),
+        ),
+        out_specs=bspec,
+        check_rep=False,
+    )(x, p["router"], p["experts"]["w_gate"], p["experts"]["w_up"],
+      p["experts"]["w_down"])
+    if m.n_shared:
+        out = out + mlp_apply(p["shared"], x, "swiglu")
+    return out
+
+
+def moe_apply(
+    p: Dict[str, Any],
+    x: jax.Array,
+    cfg: ModelConfig,
+    mesh: Optional[jax.sharding.Mesh] = None,
+    **kw,
+) -> jax.Array:
+    if mesh is None or mesh.shape.get("model", 1) == 1:
+        return moe_ref(p, x, cfg)
+    return moe_sharded(p, x, cfg, mesh, **kw)

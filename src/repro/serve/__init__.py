@@ -1,0 +1,1 @@
+"""Serving: KV-session store, decode engine, Lilac locality router."""

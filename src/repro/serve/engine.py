@@ -1,0 +1,233 @@
+"""Multi-pod serving engine: continuous batching + locality routing.
+
+Two backends behind one engine:
+
+* :class:`RealBackend` — actually decodes with the JAX model (per-session
+  positions, KV slots); used by the runnable example on host devices.
+* :class:`SimBackend` — prices each pod-step with the roofline model;
+  used by the pod-scale benchmarks where 256-chip pods are simulated.
+
+Per engine step: (1) the geo load-balancer assigns incoming requests to
+origin pods, (2) the :class:`LocalityRouter` (the paper's DTD) picks
+local/forward/acquire per request, applying KV-state migrations, (3) each
+pod runs one batched decode over its active sessions, (4) queue depths
+feed back as the CPU_i statistic.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.dist.locality import DCN_BW
+from repro.launch.hlo_analysis import HBM_BW
+from .router import LocalityRouter, RouteDecision
+
+
+@dataclass
+class Request:
+    sid: int
+    origin: int                  # pod chosen by the geo load balancer
+    n_tokens: int = 8            # decode tokens requested
+
+
+# ---------------------------------------------------------------------------
+# Backends
+# ---------------------------------------------------------------------------
+
+class SimBackend:
+    """Roofline-priced pod: decode time = max(weights, cache) HBM reads."""
+
+    def __init__(self, cfg, pod_chips: int = 256) -> None:
+        self.cfg = cfg
+        self.pod_chips = pod_chips
+        self.weight_bytes = cfg.active_param_count() * 2.0
+        self.lengths: Dict[Tuple[int, int], int] = {}   # (pod, sid) -> len
+
+    def ensure(self, pod: int, sid: int, length: int) -> None:
+        self.lengths[(pod, sid)] = max(self.lengths.get((pod, sid), 0), length)
+
+    def drop(self, pod: int, sid: int) -> int:
+        return self.lengths.pop((pod, sid), 0)
+
+    def decode_time_s(self, pod: int, sids: List[int],
+                      kv_bytes_per_token: float) -> float:
+        if not sids:
+            return 0.0
+        cache = sum(self.lengths.get((pod, s), 0) for s in sids) * kv_bytes_per_token
+        t_w = self.weight_bytes / self.pod_chips / HBM_BW
+        t_c = cache / self.pod_chips / HBM_BW
+        return max(t_w, t_c)
+
+    def step(self, pod: int, sids: List[int]) -> None:
+        for s in sids:
+            self.lengths[(pod, s)] = self.lengths.get((pod, s), 0) + 1
+
+
+class RealBackend:
+    """Actual JAX decode on host devices (one KVStore per pod)."""
+
+    def __init__(self, cfg, ctx, params, n_pods: int, n_slots: int,
+                 max_len: int) -> None:
+        import jax
+        import jax.numpy as jnp
+
+        from repro.models import decoder
+        from .kvcache import KVStore
+
+        self.cfg, self.ctx, self.params = cfg, ctx, params
+        self.stores = [KVStore(cfg, n_slots, max_len) for _ in range(n_pods)]
+        self._jnp = jnp
+
+        def step(params, caches, tokens, pos):
+            return decoder.decode_step(cfg, ctx, params, caches, tokens, pos)
+
+        self._step = jax.jit(step)
+
+    def ensure(self, pod: int, sid: int, length: int) -> None:
+        st = self.stores[pod]
+        if not st.has(sid):
+            s = st.alloc(sid)
+            s.length = length
+
+    def transfer(self, src: int, dst: int, sid: int) -> float:
+        """Move a session's KV column between pods; returns bytes shipped."""
+        st = self.stores[src]
+        if not st.has(sid):
+            self.ensure(dst, sid, 0)
+            return 0.0
+        blob = st.export_session(sid)
+        st.free(sid)
+        self.stores[dst].import_session(blob)
+        return self.stores[dst].nbytes_session()
+
+    def drop(self, pod: int, sid: int) -> int:
+        st = self.stores[pod]
+        n = st.sessions[sid].length if st.has(sid) else 0
+        st.free(sid)
+        return n
+
+    def step(self, pod: int, sids: List[int]) -> Dict[int, int]:
+        """One batched decode for the pod's sessions; returns new tokens."""
+        jnp = self._jnp
+        st = self.stores[pod]
+        if not sids:
+            return {}
+        tokens = np.zeros((st.n_slots,), np.int32)
+        pos = np.zeros((st.n_slots,), np.int32)
+        for sid in sids:
+            s = st.sessions[sid]
+            tokens[s.slot] = s.last_token
+            pos[s.slot] = s.length
+        logits, st.caches = self._step(
+            self.params, st.caches, jnp.asarray(tokens), jnp.asarray(pos))
+        nxt = np.asarray(jnp.argmax(logits, axis=-1), np.int32)
+        out = {}
+        for sid in sids:
+            s = st.sessions[sid]
+            s.last_token = int(nxt[s.slot])
+            s.length += 1
+            out[sid] = s.last_token
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Engine
+# ---------------------------------------------------------------------------
+
+@dataclass
+class EngineMetrics:
+    steps: int = 0
+    tokens: int = 0
+    sim_time_s: float = 0.0
+    wire_bytes: float = 0.0
+    transfers: int = 0
+    forwards: int = 0
+    local: int = 0
+
+    def as_dict(self) -> Dict[str, float]:
+        return {
+            "steps": self.steps, "tokens": self.tokens,
+            "sim_time_s": self.sim_time_s,
+            "tokens_per_s": self.tokens / max(1e-9, self.sim_time_s),
+            "wire_GB": self.wire_bytes / 1e9,
+            "transfers": self.transfers, "forwards": self.forwards,
+            "local": self.local,
+        }
+
+
+class MultiPodEngine:
+    def __init__(self, n_pods: int, backend, router: LocalityRouter) -> None:
+        self.n_pods = n_pods
+        self.backend = backend
+        self.router = router
+        self.queues: List[List[Request]] = [[] for _ in range(n_pods)]
+        self.session_len: Dict[int, int] = {}
+        self.session_home: Dict[int, int] = {}
+        self.metrics = EngineMetrics()
+
+    def submit(self, req: Request) -> RouteDecision:
+        m = self.metrics
+        length = self.session_len.get(req.sid, 0)
+        dec = self.router.route(req.origin, req.sid, length)
+        if dec.action == "acquire":
+            src = self.session_home.get(req.sid, dec.target)
+            if src != dec.target:
+                if hasattr(self.backend, "transfer"):
+                    shipped = self.backend.transfer(src, dec.target, req.sid)
+                    dec = dataclasses.replace(dec, wire_bytes=max(dec.wire_bytes, shipped))
+                else:
+                    self.backend.drop(src, req.sid)
+                m.transfers += 1
+        elif dec.action == "forward":
+            m.forwards += 1
+        else:
+            m.local += 1
+        self.backend.ensure(dec.target, req.sid, length)
+        self.session_home[req.sid] = dec.target
+        self.queues[dec.target].append(req)
+        m.wire_bytes += dec.wire_bytes
+        self.metrics.sim_time_s += dec.wire_bytes / DCN_BW
+        return dec
+
+    def run_step(self) -> None:
+        """One decode step on every pod over its queued sessions."""
+        m = self.metrics
+        pod_times = []
+        for pod in range(self.n_pods):
+            reqs = self.queues[pod]
+            if not reqs:
+                pod_times.append(0.0)
+                continue
+            sids = []
+            for r in reqs:
+                if r.n_tokens > 0:
+                    sids.append(r.sid)
+            sids = list(dict.fromkeys(sids))
+            if hasattr(self.backend, "decode_time_s"):
+                pod_times.append(self.backend.decode_time_s(
+                    pod, sids, self.router.kv_bytes_per_token))
+                self.backend.step(pod, sids)
+            else:
+                self.backend.step(pod, sids)
+                pod_times.append(0.0)
+            for r in reqs:
+                r.n_tokens -= 1
+                self.session_len[r.sid] = self.session_len.get(r.sid, 0) + 1
+                m.tokens += 1
+            self.queues[pod] = [r for r in reqs if r.n_tokens > 0]
+        # pods run in parallel; the step takes as long as the slowest pod
+        m.sim_time_s += max(pod_times) if pod_times else 0.0
+        m.steps += 1
+        # queue depth -> CPU_i statistic for constraint (3)
+        cap = max(1, max((len(q) for q in self.queues), default=1))
+        self.router.observe_cpu(
+            np.asarray([len(q) / max(8.0, cap) for q in self.queues]))
+
+    def drain(self, max_steps: int = 10_000) -> None:
+        steps = 0
+        while any(self.queues) and steps < max_steps:
+            self.run_step()
+            steps += 1

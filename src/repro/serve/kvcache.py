@@ -1,0 +1,100 @@
+"""Batched KV-session store: fixed-slot ring caches + alloc/free ledger.
+
+The engine decodes a *batch* of sessions at once; each session owns a slot
+in the batched cache trees produced by ``decoder.init_cache``.  Slots are
+recycled; session → slot indirection lives here.  ``export_session`` /
+``import_session`` move one session's cache column between pods (the
+"migrate state" branch of the locality router).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import decoder
+from repro.models.common import ModelConfig
+
+
+@dataclass
+class Session:
+    sid: int
+    slot: int
+    length: int = 0              # tokens currently in the cache
+    last_token: int = 0
+
+
+class KVStore:
+    def __init__(self, cfg: ModelConfig, n_slots: int, max_len: int,
+                 dtype=jnp.bfloat16) -> None:
+        self.cfg = cfg
+        self.n_slots = n_slots
+        self.max_len = max_len
+        self.caches = decoder.init_cache(cfg, n_slots, max_len, dtype)
+        self.free_slots: List[int] = list(range(n_slots))[::-1]
+        self.sessions: Dict[int, Session] = {}
+
+    # -- session lifecycle -------------------------------------------------
+    def alloc(self, sid: int) -> Session:
+        if sid in self.sessions:
+            return self.sessions[sid]
+        if not self.free_slots:
+            raise RuntimeError("KV store full")
+        s = Session(sid, self.free_slots.pop())
+        self.sessions[sid] = s
+        return s
+
+    def free(self, sid: int) -> None:
+        s = self.sessions.pop(sid, None)
+        if s is not None:
+            self.free_slots.append(s.slot)
+
+    def has(self, sid: int) -> bool:
+        return sid in self.sessions
+
+    # -- cross-pod state migration ------------------------------------------
+    def export_session(self, sid: int) -> Dict[str, Any]:
+        """Slice one session's cache column out (the bytes a lease move ships)."""
+        s = self.sessions[sid]
+
+        def slice_slot(leaf):
+            if leaf is None:
+                return None
+            # batch dim is axis 0 for prefix/suffix caches, axis 1 for
+            # group-stacked body caches
+            ax = 1 if leaf.ndim >= 4 and leaf.shape[0] != self.n_slots else 0
+            return jnp.take(leaf, jnp.asarray([s.slot]), axis=ax)
+
+        return {
+            "sid": sid,
+            "length": s.length,
+            "last_token": s.last_token,
+            "tree": jax.tree.map(slice_slot, self.caches),
+        }
+
+    def import_session(self, blob: Dict[str, Any]) -> Session:
+        s = self.alloc(blob["sid"])
+        s.length = blob["length"]
+        s.last_token = blob["last_token"]
+
+        def put(dst, src):
+            if src is None:
+                return dst
+            ax = 1 if dst.ndim >= 4 and dst.shape[0] != self.n_slots else 0
+            idx = [slice(None)] * dst.ndim
+            idx[ax] = s.slot
+            src_idx = [slice(None)] * dst.ndim
+            src_idx[ax] = 0
+            return dst.at[tuple(idx)].set(src[tuple(src_idx)].astype(dst.dtype))
+
+        self.caches = jax.tree.map(put, self.caches, blob["tree"])
+        return s
+
+    def nbytes_session(self) -> float:
+        """Bytes shipped per exported session (for the cost model)."""
+        total = 0
+        for leaf in jax.tree.leaves(self.caches):
+            total += leaf.nbytes / self.n_slots
+        return total

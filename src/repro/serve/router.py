@@ -1,0 +1,149 @@
+"""Locality-aware multi-pod request router — Lilac-TM at the serving layer.
+
+Sessions are the conflict classes; the pod holding a session's KV cache is
+its lease owner.  Per request the router solves the paper's ILP
+(:mod:`repro.core.dtd`) over the pods:
+
+* ``short`` policy — the SC communication cost, with the step constants
+  replaced by roofline-priced byte costs (:mod:`repro.dist.locality`):
+  forwarding a request is a p2p of the prompt/response; acquiring the
+  session locally ships the KV slice + an ownership handoff;
+* ``long`` policy — the LC access-frequency cost over piggybacked
+  per-pod session-touch rates (an attractor forms where a session's
+  requests concentrate);
+* constraint (3) — pods above ``max_cpu`` (queue depth / capacity) are
+  not eligible migration targets: the paper's own straggler valve.
+
+The router maintains the fine-grained ownership ledger with per-session
+*lease stickiness*: ownership only moves when the DTD decides the state
+should travel, so repeated requests on a session are certified locally —
+the serving analogue of FGL lease reuse.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.dtd import DTD, DTDConfig
+from repro.core.stats import DecayedFrequency
+from repro.dist.locality import price_session_dispatch
+
+
+@dataclass
+class RouteDecision:
+    target: int                  # pod that will run the decode
+    action: str                  # "local" | "forward" | "acquire"
+    wire_bytes: float = 0.0
+    wire_s: float = 0.0
+
+
+@dataclass
+class RouterMetrics:
+    requests: int = 0
+    local_hits: int = 0
+    forwards: int = 0
+    acquires: int = 0
+    wire_bytes: float = 0.0
+
+    @property
+    def lease_reuse_rate(self) -> float:
+        return self.local_hits / max(1, self.requests)
+
+
+class LocalityRouter:
+    def __init__(
+        self,
+        n_pods: int,
+        *,
+        policy: str = "short",
+        max_cpu: float = 0.85,
+        kv_bytes_per_token: float = 2048.0,
+        request_bytes: float = 4096.0,
+        response_bytes: float = 1024.0,
+        freq_tau_ms: float = 500.0,
+    ) -> None:
+        self.n_pods = n_pods
+        self.policy = policy
+        self.dtd = DTD(DTDConfig(policy=policy, max_cpu=max_cpu), n_pods)
+        self.owner: Dict[int, int] = {}          # session -> owning pod
+        self.freq = DecayedFrequency(n_pods, 1, tau_ms=freq_tau_ms)
+        self._freq_by_sid: Dict[int, np.ndarray] = {}
+        self.cpu = np.zeros((n_pods,), np.float64)
+        self.kv_bytes_per_token = kv_bytes_per_token
+        self.request_bytes = request_bytes
+        self.response_bytes = response_bytes
+        self.metrics = RouterMetrics()
+        self._now = 0.0
+
+    # -- stats ingestion -----------------------------------------------------
+    def observe_cpu(self, cpu: np.ndarray) -> None:
+        self.cpu[:] = cpu
+
+    def tick(self, dt_ms: float) -> None:
+        self._now += dt_ms
+
+    def _touch(self, origin: int, sid: int) -> None:
+        f = self._freq_by_sid.setdefault(sid, np.zeros((self.n_pods,), np.float64))
+        f *= 0.98
+        f[origin] += 1.0
+
+    # -- the decision ----------------------------------------------------------
+    def route(self, origin: int, sid: int, session_len: int) -> RouteDecision:
+        m = self.metrics
+        m.requests += 1
+        self._touch(origin, sid)
+        owner = self.owner.get(sid, -1)
+
+        if owner == origin:
+            m.local_hits += 1
+            return RouteDecision(origin, "local")
+
+        if owner < 0:
+            # new session: place at the DTD's choice (long-term policy may
+            # pick the attractor; default to origin)
+            target = self._dtd_target(origin, sid, owner)
+            self.owner[sid] = target
+            if target == origin:
+                m.local_hits += 1
+                return RouteDecision(origin, "local")
+            m.forwards += 1
+            wire = self.request_bytes + self.response_bytes
+            m.wire_bytes += wire
+            return RouteDecision(target, "forward", wire)
+
+        target = self._dtd_target(origin, sid, owner)
+        kv_bytes = session_len * self.kv_bytes_per_token
+        costs = price_session_dispatch(
+            self.request_bytes, self.response_bytes, kv_bytes)
+        if target == owner:
+            # migrate the work to the state owner
+            m.forwards += 1
+            m.wire_bytes += self.request_bytes + self.response_bytes
+            return RouteDecision(owner, "forward",
+                                 self.request_bytes + self.response_bytes,
+                                 costs.migrate_work_s)
+        # migrate the state to the target (lease + KV move)
+        self.owner[sid] = target
+        m.acquires += 1
+        m.wire_bytes += kv_bytes
+        return RouteDecision(target, "acquire", kv_bytes, costs.migrate_state_s)
+
+    def _dtd_target(self, origin: int, sid: int, owner: int) -> int:
+        f = self._freq_by_sid.get(sid)
+        freq = np.zeros((self.n_pods, 1), np.float64)
+        if f is not None:
+            freq[:, 0] = f
+        return self.dtd.decide(
+            origin=origin,
+            ccs=frozenset({0}),
+            lease_owner_of_cc=lambda cc: owner,
+            freq_rates=freq,
+            cpu=self.cpu,
+            opt_hint=owner if owner >= 0 else origin,
+        )
+
+    def evict(self, sid: int) -> None:
+        self.owner.pop(sid, None)
+        self._freq_by_sid.pop(sid, None)

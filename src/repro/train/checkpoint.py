@@ -1,0 +1,165 @@
+"""Fault-tolerant checkpointing: atomic two-phase commit + async writer.
+
+Layout::
+
+    <dir>/step_000120/          # one directory per step
+        manifest.json           # tree structure, shapes, dtypes
+        leaf_00000.npy ...      # row-major leaves
+    <dir>/step_000120.COMMITTED # phase-2 marker (rename-based atomicity)
+
+* ``save`` writes into ``step_X.tmp/``, fsyncs, renames to ``step_X/`` and
+  only then drops the ``.COMMITTED`` marker — a crash at any point leaves
+  either a complete committed checkpoint or ignorable garbage.
+* ``AsyncCheckpointer`` moves serialization off the training thread
+  (device→host copy happens synchronously, disk I/O in a worker).
+* ``restore`` loads the newest committed step and re-shards onto the
+  current mesh (elastic restart: the target sharding may differ from the
+  one that wrote the checkpoint).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import queue
+from pathlib import Path
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _tree_to_manifest(tree: Any) -> Tuple[Dict, list]:
+    leaves, treedef = jax.tree.flatten(tree)
+    manifest = {
+        "treedef": str(treedef),
+        "leaves": [
+            {"shape": list(np.shape(l)), "dtype": str(np.asarray(l).dtype)}
+            for l in leaves
+        ],
+    }
+    return manifest, leaves
+
+
+def save(ckpt_dir: str | Path, step: int, tree: Any) -> Path:
+    """Synchronous atomic save; returns the committed directory."""
+    ckpt_dir = Path(ckpt_dir)
+    ckpt_dir.mkdir(parents=True, exist_ok=True)
+    name = f"step_{step:08d}"
+    tmp = ckpt_dir / (name + ".tmp")
+    final = ckpt_dir / name
+    marker = ckpt_dir / (name + ".COMMITTED")
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir()
+
+    manifest, leaves = _tree_to_manifest(tree)
+    for i, leaf in enumerate(leaves):
+        arr = np.asarray(leaf)
+        with open(tmp / f"leaf_{i:05d}.npy", "wb") as f:
+            np.save(f, arr)
+            f.flush()
+            os.fsync(f.fileno())
+    with open(tmp / "manifest.json", "w") as f:
+        json.dump({**manifest, "step": step}, f)
+        f.flush()
+        os.fsync(f.fileno())
+    if final.exists():
+        shutil.rmtree(final)
+    os.rename(tmp, final)                 # phase 1: data in place
+    marker.touch()                        # phase 2: commit point
+    return final
+
+
+def committed_steps(ckpt_dir: str | Path) -> list:
+    ckpt_dir = Path(ckpt_dir)
+    if not ckpt_dir.exists():
+        return []
+    steps = []
+    for m in ckpt_dir.glob("step_*.COMMITTED"):
+        s = int(m.name.removesuffix(".COMMITTED").removeprefix("step_"))
+        if (ckpt_dir / f"step_{s:08d}").exists():
+            steps.append(s)
+    return sorted(steps)
+
+
+def latest_step(ckpt_dir: str | Path) -> Optional[int]:
+    steps = committed_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def restore(
+    ckpt_dir: str | Path,
+    like: Any,
+    step: Optional[int] = None,
+    shardings: Any = None,
+) -> Tuple[Any, int]:
+    """Restore the newest (or given) committed step into ``like``'s structure.
+
+    ``shardings`` (optional pytree of NamedSharding) re-shards onto the
+    current mesh — this is the elastic-restart path.
+    """
+    ckpt_dir = Path(ckpt_dir)
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoint under {ckpt_dir}")
+    d = ckpt_dir / f"step_{step:08d}"
+    leaves_like, treedef = jax.tree.flatten(like)
+    n = len(leaves_like)
+    out = []
+    shard_leaves = (
+        treedef.flatten_up_to(shardings) if shardings is not None else [None] * n
+    )
+    for i in range(n):
+        arr = np.load(d / f"leaf_{i:05d}.npy")
+        want = leaves_like[i]
+        if hasattr(want, "dtype"):
+            arr = arr.astype(want.dtype)
+        sh = shard_leaves[i]
+        out.append(jax.device_put(arr, sh) if sh is not None else arr)
+    return treedef.unflatten(out), step
+
+
+def prune(ckpt_dir: str | Path, keep: int = 3) -> None:
+    steps = committed_steps(ckpt_dir)
+    for s in steps[:-keep]:
+        shutil.rmtree(Path(ckpt_dir) / f"step_{s:08d}", ignore_errors=True)
+        (Path(ckpt_dir) / f"step_{s:08d}.COMMITTED").unlink(missing_ok=True)
+
+
+class AsyncCheckpointer:
+    """Background writer: ``submit`` copies to host then queues the disk I/O."""
+
+    def __init__(self, ckpt_dir: str | Path, keep: int = 3) -> None:
+        self.ckpt_dir = Path(ckpt_dir)
+        self.keep = keep
+        self._q: "queue.Queue[Optional[Tuple[int, Any]]]" = queue.Queue(maxsize=2)
+        self._errors: list = []
+        self._thread = threading.Thread(target=self._worker, daemon=True)
+        self._thread.start()
+
+    def _worker(self) -> None:
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            step, host_tree = item
+            try:
+                save(self.ckpt_dir, step, host_tree)
+                prune(self.ckpt_dir, self.keep)
+            except Exception as e:  # surfaced on next submit/close
+                self._errors.append(e)
+
+    def submit(self, step: int, tree: Any) -> None:
+        if self._errors:
+            raise RuntimeError(f"async checkpoint failed: {self._errors[0]}")
+        host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
+        self._q.put((step, host_tree))
+
+    def close(self) -> None:
+        self._q.put(None)
+        self._thread.join()
+        if self._errors:
+            raise RuntimeError(f"async checkpoint failed: {self._errors[0]}")

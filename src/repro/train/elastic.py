@@ -1,0 +1,69 @@
+"""Elastic scaling: rebuild the mesh from survivors and re-shard state.
+
+The flow at scale (and in the tests, with placeholder devices):
+
+1. the GCS view change (``repro.core.gcs``) reports the surviving hosts;
+2. ``remesh`` builds the largest (data × model) mesh the survivors support
+   (model axis preserved if possible — TP groups must stay intact, so we
+   drop whole data rows first, which is how real pods fail);
+3. training state is restored from the last committed checkpoint with the
+   *new* shardings (``checkpoint.restore(..., shardings=...)``) and the
+   data pipeline skips ahead to the checkpointed step — no token is lost
+   or duplicated;
+4. the paper's own mechanism covers the *soft* failure mode: an overloaded
+   (straggling) node is excluded from DTD migration targets by constraint
+   (3) long before it is declared failed.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, List, Optional, Sequence, Tuple
+
+import jax
+import numpy as np
+
+from . import checkpoint
+
+
+@dataclass(frozen=True)
+class ElasticPlan:
+    mesh_shape: Tuple[int, ...]
+    axis_names: Tuple[str, ...]
+    n_devices: int
+    dropped: int
+
+
+def plan_remesh(
+    n_survivors: int, model_size: int, axis_names: Tuple[str, ...] = ("data", "model")
+) -> ElasticPlan:
+    """Largest data×model grid on the survivors, keeping TP groups whole."""
+    model = model_size
+    while model > 1 and n_survivors < model:
+        model //= 2
+    data = max(1, n_survivors // model)
+    return ElasticPlan(
+        mesh_shape=(data, model),
+        axis_names=axis_names,
+        n_devices=data * model,
+        dropped=n_survivors - data * model,
+    )
+
+
+def remesh(devices: Sequence, plan: ElasticPlan) -> jax.sharding.Mesh:
+    use = np.asarray(devices[: plan.n_devices]).reshape(plan.mesh_shape)
+    return jax.sharding.Mesh(use, plan.axis_names)
+
+
+def resume_after_failure(
+    ckpt_dir: str,
+    like: Any,
+    survivors: Sequence,
+    model_size: int,
+    make_shardings,              # (mesh) -> sharding tree matching `like`
+) -> Tuple[Any, int, jax.sharding.Mesh]:
+    """Full recovery path: new mesh + resharded restore + resume step."""
+    plan = plan_remesh(len(survivors), model_size)
+    mesh = remesh(survivors, plan)
+    shardings = make_shardings(mesh)
+    state, step = checkpoint.restore(ckpt_dir, like, shardings=shardings)
+    return state, step, mesh

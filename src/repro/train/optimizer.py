@@ -1,0 +1,114 @@
+"""AdamW (from scratch — no optax on the image) + schedule + global clip.
+
+States mirror the parameter tree so every sharding rule that applies to a
+parameter applies verbatim to its ``m``/``v`` slots (ZeRO: optimizer state is
+FSDP-sharded exactly like the weights).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    betas: Tuple[float, float] = (0.9, 0.95)
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_frac: float = 0.1
+    schedule: str = "cosine"       # "cosine" | "linear" | "const"
+
+
+class OptState(NamedTuple):
+    m: Any
+    v: Any
+    count: jax.Array
+
+
+def init(params: Any) -> OptState:
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+    return OptState(m=zeros, v=jax.tree.map(jnp.copy, zeros),
+                    count=jnp.zeros((), jnp.int32))
+
+
+def schedule_lr(cfg: OptConfig, step: jax.Array) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(1.0, (step + 1.0) / max(1, cfg.warmup_steps))
+    t = jnp.clip(
+        (step - cfg.warmup_steps) / max(1, cfg.total_steps - cfg.warmup_steps),
+        0.0, 1.0,
+    )
+    if cfg.schedule == "cosine":
+        decay = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    elif cfg.schedule == "linear":
+        decay = 1.0 - (1 - cfg.min_lr_frac) * t
+    else:
+        decay = jnp.asarray(1.0)
+    return cfg.lr * warm * decay
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads: Any, max_norm: float) -> Tuple[Any, jax.Array]:
+    gn = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gn, 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype), grads), gn
+
+
+_NO_DECAY_SUBSTR = ("norm", "ln_", "bias", "A_log", "dt_bias", "D")
+
+
+def _decay_mask(params: Any) -> Any:
+    def mask(path, p):
+        name = str(path[-1].key) if hasattr(path[-1], "key") else str(path[-1])
+        nodecay = any(t in name for t in _NO_DECAY_SUBSTR) or p.ndim <= 1
+        return 0.0 if nodecay else 1.0
+
+    return jax.tree_util.tree_map_with_path(mask, params)
+
+
+def update(
+    cfg: OptConfig,
+    params: Any,
+    grads: Any,
+    state: OptState,
+) -> Tuple[Any, OptState, Dict[str, jax.Array]]:
+    """One AdamW step. Returns (new_params, new_state, metrics)."""
+    grads, gn = clip_by_global_norm(grads, cfg.clip_norm)
+    b1, b2 = cfg.betas
+    cnt = state.count + 1
+    lr = schedule_lr(cfg, state.count)
+    c1 = 1.0 - b1 ** cnt.astype(jnp.float32)
+    c2 = 1.0 - b2 ** cnt.astype(jnp.float32)
+    decay = _decay_mask(params)
+
+    def upd(p, g, m, v, dk):
+        g32 = g.astype(jnp.float32)
+        m2 = b1 * m + (1 - b1) * g32
+        v2 = b2 * v + (1 - b2) * jnp.square(g32)
+        step = (m2 / c1) / (jnp.sqrt(v2 / c2) + cfg.eps)
+        step = step + cfg.weight_decay * dk * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * step).astype(p.dtype), m2, v2
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    flat_d = treedef.flatten_up_to(decay)
+    out = [upd(p, g, m, v, dk) for p, g, m, v, dk in
+           zip(flat_p, flat_g, flat_m, flat_v, flat_d)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, OptState(new_m, new_v, cnt), {"grad_norm": gn, "lr": lr}

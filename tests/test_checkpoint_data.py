@@ -1,0 +1,139 @@
+"""Checkpoint (atomicity, async, prune, elastic) + data-pipeline tests."""
+import os
+import shutil
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import DataConfig, SyntheticLM
+from repro.train import checkpoint as ck
+from repro.train import compression as comp
+from repro.train import elastic
+
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {
+        "a": jax.random.normal(k, (8, 16)),
+        "b": {"c": jnp.arange(10, dtype=jnp.int32), "d": jnp.float32(3.5)},
+    }
+
+
+def test_save_restore_roundtrip(tmp_path):
+    t = _tree()
+    ck.save(tmp_path, 7, t)
+    got, step = ck.restore(tmp_path, t)
+    assert step == 7
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(got)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_uncommitted_checkpoint_ignored(tmp_path):
+    t = _tree()
+    ck.save(tmp_path, 1, t)
+    # simulate a crash between phase 1 and 2 of a later save
+    d = tmp_path / "step_00000002"
+    d.mkdir()
+    (d / "manifest.json").write_text("{}")      # incomplete, no marker
+    assert ck.latest_step(tmp_path) == 1
+    got, step = ck.restore(tmp_path, t)
+    assert step == 1
+
+
+def test_prune_keeps_latest(tmp_path):
+    t = _tree()
+    for s in (1, 2, 3, 4, 5):
+        ck.save(tmp_path, s, t)
+    ck.prune(tmp_path, keep=2)
+    assert ck.committed_steps(tmp_path) == [4, 5]
+
+
+def test_async_checkpointer(tmp_path):
+    t = _tree()
+    w = ck.AsyncCheckpointer(tmp_path, keep=2)
+    for s in (10, 20):
+        w.submit(s, jax.tree.map(lambda x: x + s, t))
+    w.close()
+    got, step = ck.restore(tmp_path, t)
+    assert step == 20
+    np.testing.assert_allclose(np.asarray(got["b"]["d"]), 23.5)
+
+
+def test_elastic_plan_and_restore(tmp_path):
+    t = _tree()
+    ck.save(tmp_path, 3, t)
+    plan = elastic.plan_remesh(n_survivors=1, model_size=1)
+    assert plan.mesh_shape == (1, 1)
+    mesh = elastic.remesh(jax.devices(), plan)
+
+    def make_shardings(mesh):
+        sh = jax.sharding.NamedSharding(mesh, jax.sharding.PartitionSpec())
+        return jax.tree.map(lambda _: sh, t)
+
+    state, step, mesh = elastic.resume_after_failure(
+        tmp_path, t, jax.devices(), model_size=1, make_shardings=make_shardings)
+    assert step == 3
+    np.testing.assert_array_equal(np.asarray(state["a"]), np.asarray(t["a"]))
+
+
+def test_plan_remesh_preserves_tp_groups():
+    p = elastic.plan_remesh(n_survivors=24, model_size=8)
+    assert p.mesh_shape == (3, 8)
+    assert p.dropped == 0
+    p = elastic.plan_remesh(n_survivors=6, model_size=8)
+    assert p.mesh_shape[1] <= 6 and p.n_devices <= 6
+
+
+# ---------------------------------------------------------------------------
+# data pipeline
+# ---------------------------------------------------------------------------
+
+def test_data_determinism_and_skip_ahead():
+    cfg = DataConfig(vocab_size=512, seq_len=32, global_batch=8, seed=1)
+    a, b = SyntheticLM(cfg), SyntheticLM(cfg)
+    np.testing.assert_array_equal(a.batch(5)["tokens"], b.batch(5)["tokens"])
+    assert not np.array_equal(a.batch(5)["tokens"], a.batch(6)["tokens"])
+
+
+def test_data_host_slicing_differs():
+    base = dict(vocab_size=512, seq_len=16, global_batch=8, seed=1, n_hosts=2)
+    h0 = SyntheticLM(DataConfig(**base, host_id=0)).batch(3)
+    h1 = SyntheticLM(DataConfig(**base, host_id=1)).batch(3)
+    assert h0["tokens"].shape == (4, 16)
+    assert not np.array_equal(h0["tokens"], h1["tokens"])
+
+
+def test_labels_are_shifted_tokens():
+    cfg = DataConfig(vocab_size=512, seq_len=16, global_batch=4, seed=0)
+    b = SyntheticLM(cfg).batch(0)
+    np.testing.assert_array_equal(b["labels"][:, :-1], b["tokens"][:, 1:])
+    assert (b["labels"][:, -1] == -1).all()
+
+
+# ---------------------------------------------------------------------------
+# gradient compression
+# ---------------------------------------------------------------------------
+
+def test_compression_error_feedback_converges():
+    """Accumulated dequantized sums track the true sums (error feedback)."""
+    rng = np.random.default_rng(0)
+    g_stream = [jnp.asarray(rng.standard_normal(256) * 0.01, jnp.float32)
+                for _ in range(50)]
+    res = jnp.zeros(256, jnp.float32)
+    acc = jnp.zeros(256, jnp.float32)
+    for g in g_stream:
+        c, res = comp.compress(g, res)
+        acc = acc + comp.decompress(c)
+    true = sum(np.asarray(g) for g in g_stream)
+    # residual carries at most one step's quantization error
+    err = np.abs(np.asarray(acc) - true).max()
+    assert err < 2 * float(np.abs(np.asarray(res)).max() + 1e-6) + 1e-3
+
+
+def test_compression_wire_dtype_is_int8():
+    c, _ = comp.compress(jnp.ones(16) * 0.5, jnp.zeros(16))
+    assert c.q.dtype == jnp.int8
+    np.testing.assert_allclose(np.asarray(comp.decompress(c)), 0.5, rtol=1e-2)

@@ -1,0 +1,89 @@
+"""DTD tests: SC/LC cost formulas, the O(n) solve, numpy/jit agreement."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.dtd import (C_AB, C_P2P, C_URB, long_term_costs,
+                            long_term_costs_np, short_term_costs,
+                            short_term_costs_np, solve, solve_np)
+
+
+def test_sc_four_cases():
+    lease = np.array([[1, 1], [1, 0], [0, 0], [1, 1]], np.float32)
+    cpu = np.zeros(4)
+    c = short_term_costs_np(lease, cpu, origin=0, max_cpu=0.9, overload_ctrl=True)
+    assert c[0] == C_URB                               # origin owns all
+    assert c[1] == C_P2P + C_AB + 2 * C_URB            # remote, missing leases
+    assert c[2] == C_P2P + C_AB + 2 * C_URB
+    assert c[3] == C_P2P + C_URB                       # remote, owns all
+    c2 = short_term_costs_np(lease, cpu, origin=1, max_cpu=0.9, overload_ctrl=True)
+    assert c2[1] == C_AB + 2 * C_URB                   # origin, missing leases
+
+
+def test_lc_formula():
+    freq = np.array([[5.0, 1.0], [0.0, 2.0], [1.0, 1.0]])
+    c = long_term_costs_np(freq, np.zeros(3), 0.9, True)
+    total = freq.sum()
+    for i in range(3):
+        assert c[i] == pytest.approx(total - freq[i].sum())
+
+
+def test_overload_constraint_excludes_node():
+    lease = np.ones((3, 2), np.float32)
+    cpu = np.array([0.2, 0.95, 0.2])
+    c = short_term_costs_np(lease, cpu, 0, 0.85, True)
+    assert np.isinf(c[1])
+    assert solve_np(c, origin=0) == 0
+
+
+def test_all_overloaded_falls_back_to_origin():
+    c = np.array([np.inf, np.inf, np.inf])
+    assert solve_np(c, origin=2) == 2
+
+
+def test_tie_break_rendezvous_consistent():
+    c = np.array([1.0, 1.0, 5.0, 1.0])
+    picks = {solve_np(c, origin=o, tie_node=7) for o in range(4)}
+    assert len(picks) == 1                          # all origins agree
+    assert solve_np(c, origin=0, tie_node=-1) == 0  # origin preferred if tied
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    n=st.integers(2, 8),
+    s=st.integers(1, 5),
+    origin=st.integers(0, 7),
+    seed=st.integers(0, 2**31 - 1),
+    ctrl=st.booleans(),
+)
+def test_np_matches_jit(n, s, origin, seed, ctrl):
+    rng = np.random.default_rng(seed)
+    origin = origin % n
+    lease = (rng.random((n, s)) < 0.5).astype(np.float32)
+    freq = rng.random((n, s)).astype(np.float32) * 3
+    cpu = rng.random(n).astype(np.float32)
+    a = short_term_costs_np(lease, cpu, origin, 0.85, ctrl)
+    b = np.asarray(short_term_costs(lease, cpu, np.int32(origin), 0.85, ctrl))
+    np.testing.assert_allclose(a, b, rtol=1e-6)
+    a = long_term_costs_np(freq, cpu, 0.85, ctrl)
+    b = np.asarray(long_term_costs(freq, cpu, 0.85, ctrl))
+    np.testing.assert_allclose(a, b, rtol=1e-5)
+
+
+@settings(max_examples=60, deadline=None)
+@given(n=st.integers(1, 8), seed=st.integers(0, 2**31 - 1),
+       tie=st.integers(-1, 12))
+def test_solve_optimality(n, seed, tie):
+    rng = np.random.default_rng(seed)
+    costs = rng.random(n)
+    costs[rng.random(n) < 0.3] = np.inf
+    origin = int(rng.integers(n))
+    pick = solve_np(costs, origin, tie)
+    jpick = int(np.asarray(solve(costs, np.int32(origin),
+                                 np.int32(tie))))
+    if np.isfinite(costs).any():
+        best = np.min(costs[np.isfinite(costs)])
+        assert costs[pick] <= best + 1e-9           # picked an argmin
+        assert costs[jpick] <= best + 1e-9
+    else:
+        assert pick == origin and jpick == origin

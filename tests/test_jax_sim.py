@@ -1,0 +1,36 @@
+"""The vectorized sweep model reproduces the event simulator's trends."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import jax_sim
+
+
+def test_reuse_rises_with_locality():
+    out = jax_sim.locality_sweep([0.0, 0.5, 0.95], seeds=4)
+    r = np.asarray(out["reuse"])
+    assert r[2] > r[1] > r[0]
+    assert r[2] > 0.5
+
+
+def test_fgl_beats_alc_reuse():
+    fgl = jax_sim.locality_sweep([0.9], seeds=4, fine_grained=True)
+    alc = jax_sim.locality_sweep([0.9], seeds=4, fine_grained=False)
+    assert float(fgl["reuse"][0]) > float(alc["reuse"][0])
+    assert float(fgl["throughput"][0]) >= float(alc["throughput"][0])
+
+
+def test_migration_cuts_lease_moves():
+    base = jax_sim.locality_sweep([0.3], seeds=4, migrate=False)
+    mig = jax_sim.locality_sweep([0.3], seeds=4, migrate=True)
+    assert float(mig["lease_moves"][0]) < float(base["lease_moves"][0])
+    assert float(mig["throughput"][0]) >= float(base["throughput"][0])
+
+
+def test_throughput_ordering_high_locality():
+    """ALC <= FGL <= FGL+migration at high locality (paper Fig 3a shape)."""
+    alc = jax_sim.locality_sweep([0.9], seeds=6, fine_grained=False)
+    fgl = jax_sim.locality_sweep([0.9], seeds=6, fine_grained=True)
+    lilac = jax_sim.locality_sweep([0.9], seeds=6, fine_grained=True,
+                                   migrate=True)
+    a, f, l = (float(x["throughput"][0]) for x in (alc, fgl, lilac))
+    assert a <= f + 1e-6 and f <= l + 1e-6

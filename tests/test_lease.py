@@ -1,0 +1,97 @@
+"""Unit tests for the lease managers (Algorithm 1 + coarse ALC baseline)."""
+import pytest
+
+from repro.core.lease import ALCLeaseManager, FGLLeaseManager, LeaseRequest
+
+
+def _req(req_id, proc, ccs, coarse=False):
+    return LeaseRequest(req_id=req_id, proc=proc, ccs=tuple(sorted(ccs)),
+                        coarse=coarse)
+
+
+def test_fgl_piggyback_fig2_scenario():
+    """Fig. 2: T2 on {1,3,4} piggybacks on T0's {1,2} + T1's {2,3,4} LORs."""
+    lm = FGLLeaseManager(proc=0, n_classes=8)
+    lm.on_to_deliver(_req(1, 0, (1, 2)))          # T0
+    lm.on_to_deliver(_req(2, 0, (2, 3, 4)))       # T1
+    got = lm.try_piggyback(frozenset({1, 3, 4}))
+    assert got is not None
+    assert sorted(l.cc for l in got) == [1, 3, 4]
+    # piggybacked LORs counted an extra active transaction
+    assert all(l.activeXacts == 2 for l in got)
+
+
+def test_alc_cannot_reuse_across_leases():
+    """The same scenario under coarse ALC requires a new lease request."""
+    lm = ALCLeaseManager(proc=0, n_classes=8)
+    lm.on_to_deliver(_req(1, 0, (1, 2), coarse=True))
+    lm.on_to_deliver(_req(2, 0, (2, 3, 4), coarse=True))
+    assert lm.try_piggyback(frozenset({1, 3, 4})) is None
+    # subset of a single lease is reusable
+    assert lm.try_piggyback(frozenset({3, 4})) is not None
+
+
+def test_fgl_blocked_lor_not_reusable():
+    lm = FGLLeaseManager(proc=0, n_classes=4)
+    lm.on_to_deliver(_req(1, 0, (1,)))
+    # remote request on cc=1 opt-delivered -> local LOR blocked (fairness)
+    lm.on_opt_deliver(_req(2, 1, (1,)))
+    assert lm.try_piggyback(frozenset({1})) is None
+
+
+def test_opt_deliver_frees_idle_head_lor():
+    lm = FGLLeaseManager(proc=0, n_classes=4)
+    lors = lm.on_to_deliver(_req(1, 0, (1,)))
+    lm.finished_xact(lors)                        # drains activeXacts to 0
+    to_free = lm.on_opt_deliver(_req(2, 1, (1,)))
+    assert to_free and to_free[0] is lors[0]
+
+
+def test_finished_xact_frees_blocked_lor_on_drain():
+    lm = FGLLeaseManager(proc=0, n_classes=4)
+    lors = lm.on_to_deliver(_req(1, 0, (1,)))
+    assert lm.on_opt_deliver(_req(2, 1, (1,))) == []   # busy: not freed yet
+    to_free = lm.finished_xact(lors)
+    assert to_free == [lors[0]]
+
+
+def test_is_enabled_requires_queue_head():
+    lm = FGLLeaseManager(proc=0, n_classes=4)
+    first = lm.on_to_deliver(_req(1, 1, (2,)))    # remote holds the lease
+    mine = lm.on_to_deliver(_req(2, 0, (2,)))
+    assert not lm.is_enabled(mine)
+    lm.on_ur_deliver_freed([first[0].key()])
+    assert lm.is_enabled(mine)
+
+
+def test_ur_deliver_dequeues():
+    lm = FGLLeaseManager(proc=0, n_classes=4)
+    lors = lm.on_to_deliver(_req(1, 1, (0, 3)))
+    assert lm.head_owner(0) == 1 and lm.head_owner(3) == 1
+    lm.on_ur_deliver_freed([l.key() for l in lors])
+    assert lm.head_owner(0) == -1 and lm.head_owner(3) == -1
+
+
+def test_purge_proc_reclaims_failed_member():
+    lm = FGLLeaseManager(proc=0, n_classes=4)
+    lm.on_to_deliver(_req(1, 1, (0, 1)))
+    mine = lm.on_to_deliver(_req(2, 0, (0,)))
+    assert not lm.is_enabled(mine)
+    lm.purge_proc(1)                              # view change: node 1 failed
+    assert lm.is_enabled(mine)
+
+
+def test_pending_opt_blocks_lors_born_after():
+    """LORs enqueued while a conflicting request is opt-pending are born
+    blocked (the opt/TO race the module docstring documents)."""
+    lm = FGLLeaseManager(proc=0, n_classes=4)
+    lm.on_opt_deliver(_req(2, 1, (1,)))           # remote req, TO pending
+    lors = lm.on_to_deliver(_req(1, 0, (1,)))     # mine arrives after
+    assert lors[0].blocked
+
+
+def test_fgl_missing_ccs():
+    lm = FGLLeaseManager(proc=0, n_classes=8)
+    lm.on_to_deliver(_req(1, 0, (1, 2)))
+    assert lm.missing_ccs(frozenset({1, 5})) == frozenset({5})
+    assert lm.missing_ccs(frozenset({1, 2})) == frozenset()

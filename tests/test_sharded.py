@@ -1,0 +1,162 @@
+"""Multi-device SPMD correctness, run in a subprocess with 8 host devices.
+
+(The main pytest process must keep seeing 1 device — the brief forbids
+forcing the device count globally — so these tests exec a child python
+with ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.)
+"""
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+
+def _run(code: str) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                         capture_output=True, text=True, env=env, timeout=600)
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    return out.stdout
+
+
+def test_moe_sharded_matches_ref():
+    _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import Mesh
+        from repro.configs import get_smoke_config
+        from repro.models import moe
+        from repro.models.common import init_params, moe_shapes
+        import dataclasses
+
+        cfg = dataclasses.replace(get_smoke_config("mixtral-8x7b"), dtype="float32")
+        m = cfg.moe
+        mesh = Mesh(np.array(jax.devices()).reshape(2, 4), ("data", "model"))
+        rng = np.random.default_rng(0)
+        d, f = cfg.d_model, m.d_expert
+        router = jnp.asarray(rng.standard_normal((d, m.n_experts)) * 0.1, jnp.float32)
+        wg = jnp.asarray(rng.standard_normal((m.n_experts, d, f)) * 0.05, jnp.float32)
+        wu = jnp.asarray(rng.standard_normal((m.n_experts, d, f)) * 0.05, jnp.float32)
+        wd = jnp.asarray(rng.standard_normal((m.n_experts, f, d)) * 0.05, jnp.float32)
+        x = jnp.asarray(rng.standard_normal((4, 16, d)), jnp.float32)
+
+        p_ref = {"router": router, "experts": {
+            "w_gate": wg[None], "w_up": wu[None], "w_down": wd[None]}}
+        y_ref = moe.moe_ref(p_ref, x, cfg)
+
+        cg, cu, cdn = moe.to_chunked(wg, wu, wd, model_size=4)
+        p_sh = {"router": router, "experts": {"w_gate": cg, "w_up": cu, "w_down": cdn}}
+        with mesh:
+            y_sh = moe.moe_sharded(p_sh, x, cfg, mesh, batch_axes=("data",),
+                                   capacity_factor=8.0)  # no drops
+        err = float(jnp.max(jnp.abs(y_sh - y_ref)))
+        scale = float(jnp.max(jnp.abs(y_ref))) + 1e-9
+        assert err / scale < 2e-4, (err, scale)
+        print("MOE OK", err / scale)
+    """)
+
+
+def test_sharded_train_step_matches_single_device():
+    _run("""
+        import jax, jax.numpy as jnp, numpy as np, dataclasses
+        from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+        from repro.configs import get_smoke_config
+        from repro.models import decoder
+        from repro.models.common import init_params, param_shapes
+        from repro.dist import sharding as shd
+        from repro.train.train_step import make_train_step, TrainConfig
+        from repro.train import optimizer as opt
+
+        cfg = dataclasses.replace(get_smoke_config("glm4-9b"), dtype="float32")
+        key = jax.random.PRNGKey(0)
+        params = init_params(cfg, key)
+        opt_state = opt.init(params)
+        batch = {
+            "tokens": jax.random.randint(key, (8, 32), 0, cfg.vocab_size),
+            "labels": jax.random.randint(key, (8, 32), 0, cfg.vocab_size),
+        }
+        # single device
+        ctx1 = decoder.RunCtx(mesh=None, use_kernel="ref")
+        s1 = make_train_step(cfg, ctx1, TrainConfig())
+        p1, o1, m1 = jax.jit(s1)(params, opt_state, batch)
+
+        # 8-device mesh with full sharding rules
+        mesh = Mesh(np.array(jax.devices()).reshape(4, 2), ("data", "model"))
+        ctx8 = decoder.RunCtx(mesh=mesh, batch_axes=("data",), use_kernel="ref")
+        pspec = shd.param_shardings(cfg, mesh)
+        p_sh = jax.tree.map(jax.device_put, params, pspec)
+        o_sh = opt.OptState(
+            m=jax.tree.map(jax.device_put, opt_state.m, pspec),
+            v=jax.tree.map(jax.device_put, opt_state.v, pspec),
+            count=opt_state.count)
+        bspec = NamedSharding(mesh, P("data", None))
+        b_sh = {k: jax.device_put(v, bspec) for k, v in batch.items()}
+        s8 = make_train_step(cfg, ctx8, TrainConfig())
+        p8, o8, m8 = jax.jit(s8)(p_sh, o_sh, b_sh)
+
+        assert abs(float(m1["loss"]) - float(m8["loss"])) < 1e-4, (m1, m8)
+        for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p8)):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       atol=3e-5, rtol=3e-4)
+        print("TRAIN SPMD OK", float(m1["loss"]))
+    """)
+
+
+def test_compressed_psum_shard_map():
+    _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import Mesh, PartitionSpec as P
+        from jax.experimental.shard_map import shard_map
+        from repro.train.compression import compressed_psum
+
+        mesh = Mesh(np.array(jax.devices()).reshape(8,), ("data",))
+        rng = np.random.default_rng(0)
+        g = jnp.asarray(rng.standard_normal((8, 128)) * 0.01, jnp.float32)
+        res = jnp.zeros((8, 128), jnp.float32)
+
+        def body(g, r):
+            out, new_r = compressed_psum(g[0], r[0], "data")
+            return out[None], new_r[None]
+
+        out, new_res = shard_map(body, mesh=mesh,
+                                 in_specs=(P("data", None), P("data", None)),
+                                 out_specs=(P("data", None), P("data", None)),
+                                 check_rep=False)(g, res)
+        true_mean = np.asarray(g).mean(axis=0)
+        got = np.asarray(out)[0]
+        np.testing.assert_allclose(got, true_mean, atol=5e-4)
+        # every shard sees the same mean
+        for i in range(8):
+            np.testing.assert_allclose(np.asarray(out)[i], got, atol=1e-7)
+        print("COMPRESSED PSUM OK")
+    """)
+
+
+def test_decode_step_sharded_lowers_and_runs():
+    _run("""
+        import jax, jax.numpy as jnp, numpy as np, dataclasses
+        from jax.sharding import Mesh
+        from repro.configs import get_smoke_config
+        from repro.models import decoder
+        from repro.models.common import init_params
+        from repro.dist import sharding as shd
+
+        cfg = dataclasses.replace(get_smoke_config("deepseek-v2-236b"), dtype="float32")
+        mesh = Mesh(np.array(jax.devices()).reshape(2, 4), ("data", "model"))
+        ctx = decoder.RunCtx(mesh=mesh, batch_axes=("data",), use_kernel="ref")
+        params = init_params(cfg, jax.random.PRNGKey(0), model_size=4)
+        caches = decoder.init_cache(cfg, 8, 32, jnp.float32)
+        toks = jnp.zeros((8,), jnp.int32)
+        with mesh:
+            logits, caches = jax.jit(
+                lambda p, c, t: decoder.decode_step(cfg, ctx, p, c, t,
+                                                     jnp.asarray(4, jnp.int32))
+            )(params, caches, toks)
+        assert np.isfinite(np.asarray(logits, np.float32)).all()
+        print("DECODE SPMD OK")
+    """)
