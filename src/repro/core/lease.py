@@ -155,7 +155,10 @@ class LeaseManagerBase:
                             self.cq[cc].remove(lor)
                         except ValueError:
                             pass
-            self._by_req[req_id] = [l for l in lors if l.ccs != ccs]
+            # drop only the named (ccs, proc) record, matching the dequeue above
+            self._by_req[req_id] = [
+                l for l in lors if not (l.ccs == ccs and l.proc == proc)
+            ]
             if not self._by_req[req_id]:
                 del self._by_req[req_id]
 

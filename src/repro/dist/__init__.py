@@ -1,0 +1,29 @@
+"""Distribution layer: locality pricing + SPMD sharding rules.
+
+This package is the serving/training analogue of the paper's Distributed
+Transactional Dispatcher (DTD).  The DTD chooses, per transaction, between
+
+* **migrating the transaction** to the replica that owns the leases it
+  needs (ship the *work*), and
+* **fetching the leases** to the transaction's origin replica (ship the
+  *state*),
+
+by comparing step-count costs (SC) or access-frequency costs (LC).  In a
+distributed JAX serving system the same fork appears everywhere:
+
+* route a decode request to the pod holding the session's KV cache, or
+  migrate the KV cache to the request's origin pod
+  (:func:`repro.dist.locality.price_session_dispatch`);
+* all-to-all the *tokens* to the devices holding the experts, or
+  all-gather the *expert weights* to the tokens
+  (:func:`repro.dist.locality.price_moe_dispatch`).
+
+:mod:`repro.dist.locality` re-expresses the DTD's SC/LC decision in
+bytes-over-wire against the interconnect hierarchy (ICI / PCIe / DCN);
+:mod:`repro.dist.sharding` supplies the SPMD placement rules (parameter,
+batch and KV-cache shardings) that make the "state owner" of every tensor
+explicit in the first place.
+"""
+from repro.dist import locality, sharding
+
+__all__ = ["locality", "sharding"]

@@ -1,0 +1,211 @@
+"""SPMD sharding rules: who owns which slice of every tensor.
+
+The locality pricing in :mod:`repro.dist.locality` is only meaningful once
+each tensor has a well-defined owner; this module is that ledger.  It maps
+the parameter / batch / KV-cache pytrees of :mod:`repro.models` onto a mesh
+whose axes are split into *batch* axes (pure data parallelism — ``pod``,
+``data``) and one *model* axis (tensor/expert parallelism):
+
+* ``param_shardings`` — megatron-style rules by leaf name: column-parallel
+  projections shard their output features, row-parallel projections their
+  input features, chunked MoE expert weights their EP×TP chunk axis, and
+  everything small (norms, router, conv taps) is replicated.  Stacked layer
+  groups (``blocks.posN``, leading ``n_groups`` axis) are handled by
+  indexing dims from the *end*, so the same rule covers unrolled and
+  scanned layers.
+* ``batch_pspecs`` / ``cache_pspecs`` — inputs and KV caches shard their
+  batch dim over the batch axes; GQA KV caches additionally shard the
+  kv-head dim over the model axis, mirroring the ``wk``/``wv`` column
+  sharding so decode reads stay local to the head's owner.
+
+Every rule is guarded by divisibility: a dim that the mesh doesn't divide
+is replicated rather than rejected, so smoke meshes (1×1) and production
+meshes (16×16, 2×16×16) use one code path.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.common import ModelConfig, param_shapes
+
+MODEL_AXIS = "model"
+
+# projections whose *last* dim is feature-parallel (column-parallel)
+_COL_PARALLEL = {"wq", "wk", "wv", "wq_b", "wkv_b", "w_in", "w_gate", "w_up",
+                 "lm_head"}
+# projections whose second-to-last dim is feature-parallel (row-parallel)
+_ROW_PARALLEL = {"wo", "w_down", "w_out"}
+
+
+@dataclass(frozen=True)
+class MeshAxes:
+    """A mesh's axis names split into batch (data-parallel) and model."""
+
+    batch: Tuple[str, ...]
+    model: str = MODEL_AXIS
+
+    @classmethod
+    def for_mesh(cls, mesh: Mesh) -> "MeshAxes":
+        names = tuple(mesh.axis_names)
+        if MODEL_AXIS in names:
+            return cls(batch=tuple(a for a in names if a != MODEL_AXIS))
+        # no model axis: a pure data-parallel mesh, never megatron sharding
+        return cls(batch=names)
+
+    def model_size(self, mesh: Mesh) -> int:
+        return int(dict(mesh.shape).get(self.model, 1))
+
+
+def _divisible_batch_axes(
+    n: int, axes: Sequence[str], mesh: Mesh
+) -> Optional[Tuple[str, ...]]:
+    """Largest suffix of ``axes`` whose total size divides ``n`` (None: none).
+
+    Mirrors :func:`repro.models.moe.moe_sharded`: leading axes (``pod``) are
+    dropped first, so a batch too small for the full mesh still uses the
+    inner data axis.
+    """
+    axes = tuple(axes)
+    while axes:
+        size = 1
+        for a in axes:
+            size *= int(mesh.shape[a])
+        if size > 1 and n % size == 0:
+            return axes
+        axes = axes[1:]
+    return None
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+def _param_spec(path, shape: Tuple[int, ...], model: str, msize: int) -> P:
+    """Sharding rule for one parameter leaf, by its name and ancestry.
+
+    Dims are indexed from the end so the rule is invariant to the leading
+    ``n_groups`` stack axis of scanned layer groups.
+    """
+    name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+    in_experts = any(getattr(p, "key", None) == "experts" for p in path)
+    nd = len(shape)
+
+    def at(dim_from_end: int) -> P:
+        idx = nd + dim_from_end
+        if msize <= 1 or idx < 0 or shape[idx] % msize:
+            return P()
+        spec: List[Any] = [None] * nd
+        spec[idx] = model
+        return P(*spec)
+
+    if in_experts and name in ("w_gate", "w_up", "w_down"):
+        return at(-4)              # [*, nc, n_e, d, f_c]: shard the chunk axis
+    if name == "embed":
+        return at(-2)              # [vocab, d]: vocab-parallel
+    if name in _COL_PARALLEL:
+        return at(-1)
+    if name in _ROW_PARALLEL:
+        return at(-2)
+    return P()                     # norms, router, conv taps, biases, lora-a
+
+
+def param_pspecs(cfg: ModelConfig, mesh: Mesh) -> Dict[str, Any]:
+    """PartitionSpec tree congruent with ``param_shapes``/``init_params``."""
+    ax = MeshAxes.for_mesh(mesh)
+    msize = ax.model_size(mesh)
+    shapes = param_shapes(cfg, model_size=msize)
+    return jax.tree_util.tree_map_with_path(
+        lambda p, s: _param_spec(p, s, ax.model, msize),
+        shapes, is_leaf=lambda s: isinstance(s, tuple),
+    )
+
+
+def param_shardings(cfg: ModelConfig, mesh: Mesh) -> Dict[str, Any]:
+    """NamedSharding tree congruent with the parameter pytree."""
+    return jax.tree.map(
+        lambda spec: NamedSharding(mesh, spec),
+        param_pspecs(cfg, mesh),
+        is_leaf=lambda s: isinstance(s, P),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Batch inputs
+# ---------------------------------------------------------------------------
+
+def batch_pspecs(
+    cfg: ModelConfig, mesh: Mesh, specs: Dict[str, Any]
+) -> Dict[str, P]:
+    """PartitionSpecs for a model-input dict (``configs.shapes.input_specs``).
+
+    Every input shards its batch dim over the batch axes; M-RoPE positions
+    carry a leading ``[3]`` section axis, so their batch dim is dim 1.
+    Scalars (decode ``pos``) are replicated.
+    """
+    ax = MeshAxes.for_mesh(mesh)
+    out: Dict[str, P] = {}
+    for k, v in specs.items():
+        shape = tuple(v.shape)
+        bdim = 1 if (k == "positions" and len(shape) == 3) else 0
+        if len(shape) <= bdim:
+            out[k] = P()
+            continue
+        baxes = _divisible_batch_axes(shape[bdim], ax.batch, mesh)
+        spec: List[Any] = [None] * len(shape)
+        if baxes:
+            spec[bdim] = baxes
+        out[k] = P(*spec)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# KV / SSM caches
+# ---------------------------------------------------------------------------
+
+def _cache_leaf_spec(path, leaf, bdim: int, baxes, model: str, msize: int) -> P:
+    name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+    shape = tuple(leaf.shape)
+    spec: List[Any] = [None] * len(shape)
+    if baxes and len(shape) > bdim:
+        spec[bdim] = baxes
+    # GQA caches [.., batch, len, n_kv, head_dim]: kv heads follow wk/wv
+    if name in ("k", "v") and len(shape) == bdim + 4 and \
+            msize > 1 and shape[bdim + 2] % msize == 0:
+        spec[bdim + 2] = model
+    return P(*spec)
+
+
+def cache_pspecs(
+    cfg: ModelConfig, mesh: Mesh, tree: Dict[str, Any], batch: int
+) -> Dict[str, Any]:
+    """PartitionSpec tree congruent with ``decoder.init_cache(cfg, batch, ..)``.
+
+    ``tree`` may hold arrays or ShapeDtypeStructs (``jax.eval_shape``).  The
+    ``prefix``/``suffix`` entries put batch at dim 0; the scanned ``body``
+    entries carry a leading ``n_groups`` axis, so batch is dim 1 there —
+    passing ``batch`` explicitly keeps that unambiguous even when a cache
+    dim happens to equal ``n_groups``.
+    """
+    ax = MeshAxes.for_mesh(mesh)
+    msize = ax.model_size(mesh)
+    baxes = _divisible_batch_axes(batch, ax.batch, mesh)
+
+    def layer(entry: Any, stacked: bool) -> Any:
+        return jax.tree_util.tree_map_with_path(
+            lambda p, l: _cache_leaf_spec(
+                p, l, 1 if stacked else 0, baxes, ax.model, msize),
+            entry,
+        )
+
+    out: Dict[str, Any] = {
+        "prefix": [layer(c, stacked=False) for c in tree.get("prefix", [])],
+        "body": None,
+        "suffix": [layer(c, stacked=False) for c in tree.get("suffix", [])],
+    }
+    if tree.get("body") is not None:
+        out["body"] = [layer(c, stacked=True) for c in tree["body"]]
+    return out

@@ -137,11 +137,11 @@ def _moe_local(
     *,
     cfg: ModelConfig,
     model_axis: str,
+    model_size: int,
     capacity: int,
 ) -> jax.Array:
     """Per-device body: route, gather my experts' tokens, FFN, scatter, psum."""
     m = cfg.moe
-    model_size = jax.lax.axis_size(model_axis)
     ep, tp, n_e, _ = chunk_plan(m.n_experts, model_size)
     midx = jax.lax.axis_index(model_axis)
     ep_rank = midx // tp
@@ -228,7 +228,8 @@ def moe_sharded(
         bl, sl, dl = x_blk.shape
         y = _moe_local(
             x_blk.reshape(-1, dl), router, wg[0], wu[0], wd[0],
-            cfg=cfg, model_axis=model_axis, capacity=capacity,
+            cfg=cfg, model_axis=model_axis, model_size=int(model_size),
+            capacity=capacity,
         )
         return y.reshape(bl, sl, dl).astype(x_blk.dtype)
 

@@ -115,8 +115,10 @@ class LocalityRouter:
 
         target = self._dtd_target(origin, sid, owner)
         kv_bytes = session_len * self.kv_bytes_per_token
+        # request/response sizes are already bytes, not tokens
         costs = price_session_dispatch(
-            self.request_bytes, self.response_bytes, kv_bytes)
+            self.request_bytes, self.response_bytes, kv_bytes,
+            wire_bytes_per_token=1.0)
         if target == owner:
             # migrate the work to the state owner
             m.forwards += 1

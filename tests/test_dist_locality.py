@@ -1,0 +1,75 @@
+"""Pricing invariants of :mod:`repro.dist.locality`.
+
+The DTD's migrate-work / migrate-state verdict must (a) flip exactly once
+as the state grows, (b) respond monotonically to bandwidth, and (c) favor
+token dispatch over expert gathering once expert parallelism is wide.
+"""
+import pytest
+
+from repro.dist.locality import (DCN_BW, MoEDispatchCost, SessionDispatchCost,
+                                 price_moe_dispatch, price_session_dispatch)
+
+
+def test_session_crossover_as_kv_grows():
+    """prefer_migration flips from False to True exactly once in kv bytes."""
+    verdicts = [
+        price_session_dispatch(4096, 1024, kv_state_bytes=kv).prefer_migration
+        for kv in (0, 1_000, 5_000, 10_000, 100_000, 10_000_000, 1e9)
+    ]
+    assert verdicts[0] is False            # empty session: fetch the (no) state
+    assert verdicts[-1] is True            # 1GB of KV: ship the request
+    flips = sum(a != b for a, b in zip(verdicts, verdicts[1:]))
+    assert flips == 1
+
+
+def test_session_crossover_point_is_the_work_bytes():
+    c = price_session_dispatch(4096, 1024, kv_state_bytes=0.0,
+                               handoff_bytes=0.0)
+    # at kv == work_bytes the two plans cost the same; just above, migrate
+    at = price_session_dispatch(4096, 1024, kv_state_bytes=c.work_bytes,
+                                handoff_bytes=0.0)
+    above = price_session_dispatch(4096, 1024,
+                                   kv_state_bytes=c.work_bytes * 1.01,
+                                   handoff_bytes=0.0)
+    assert at.migrate_work_s == pytest.approx(at.migrate_state_s)
+    assert above.prefer_migration
+
+
+def test_session_costs_monotone_in_bandwidth():
+    slow = price_session_dispatch(4096, 1024, kv_state_bytes=1e6,
+                                  dcn_bw=DCN_BW / 4)
+    fast = price_session_dispatch(4096, 1024, kv_state_bytes=1e6,
+                                  dcn_bw=DCN_BW * 4)
+    assert slow.migrate_state_s > fast.migrate_state_s
+    assert slow.migrate_work_s > fast.migrate_work_s
+    # the verdict is a byte comparison: bandwidth scales both plans equally
+    assert slow.prefer_migration == fast.prefer_migration
+
+
+def test_session_wire_bytes_tracks_chosen_plan():
+    c = price_session_dispatch(4096, 1024, kv_state_bytes=50_000_000)
+    assert isinstance(c, SessionDispatchCost)
+    assert c.prefer_migration and c.wire_bytes == c.work_bytes
+    c2 = price_session_dispatch(4096, 1024, kv_state_bytes=100.0)
+    assert not c2.prefer_migration and c2.wire_bytes == c2.state_bytes
+
+
+def test_moe_dispatch_flips_with_ep_degree():
+    """Wide EP favors token a2a; a single device needs no wire at all."""
+    kw = dict(tokens_per_device=4096, d_model=4096, top_k=2,
+              n_experts=8, d_expert=14336)
+    c1 = price_moe_dispatch(ep_degree=1, **kw)
+    c8 = price_moe_dispatch(ep_degree=8, **kw)
+    assert isinstance(c8, MoEDispatchCost)
+    assert c1.dispatch_bytes == 0.0 and not c1.prefer_dispatch
+    assert c8.prefer_dispatch
+    assert c8.dispatch_s < c8.allgather_s
+
+
+def test_moe_dispatch_flips_with_batch():
+    """Weight traffic is batch-independent: tiny batches flip to all-gather."""
+    kw = dict(d_model=4096, top_k=2, n_experts=8, d_expert=14336, ep_degree=8)
+    small = price_moe_dispatch(tokens_per_device=1, **kw)
+    big = price_moe_dispatch(tokens_per_device=1 << 20, **kw)
+    assert small.prefer_dispatch            # 1 token beats 8 experts' weights
+    assert big.dispatch_bytes > big.allgather_bytes and not big.prefer_dispatch

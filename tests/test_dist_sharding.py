@@ -1,0 +1,141 @@
+"""Structural congruence of :mod:`repro.dist.sharding` spec trees.
+
+The spec trees must mirror the ``init_params`` / ``init_cache`` pytrees
+exactly — ``jax.tree.map`` across (tree, specs) is how every consumer zips
+them — and every rule must degrade to replication on a mesh the dim sizes
+don't divide (the 1-device CPU mesh exercises exactly that path).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import get_smoke_config
+from repro.dist import sharding as shd
+from repro.models import decoder
+from repro.models.common import init_params, param_shapes
+
+ARCHS = ["glm4-9b", "mixtral-8x7b", "deepseek-v2-236b", "mamba2-780m",
+         "gemma3-27b"]
+
+
+def cpu_mesh() -> Mesh:
+    n = jax.device_count()
+    return jax.make_mesh((n, 1), ("data", "model"))
+
+
+def test_mesh_axes_split():
+    ax = shd.MeshAxes.for_mesh(cpu_mesh())
+    assert ax.batch == ("data",) and ax.model == "model"
+    devs = np.array(jax.devices()).reshape(1, jax.device_count(), 1)
+    ax3 = shd.MeshAxes.for_mesh(Mesh(devs, ("pod", "data", "model")))
+    assert ax3.batch == ("pod", "data") and ax3.model == "model"
+    # a mesh with no model axis is pure data parallelism, never megatron
+    dp = Mesh(devs.reshape(1, -1), ("pod", "data"))
+    ax_dp = shd.MeshAxes.for_mesh(dp)
+    assert ax_dp.batch == ("pod", "data") and ax_dp.model_size(dp) == 1
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_param_shardings_congruent_with_init_params(arch):
+    cfg = dataclasses.replace(get_smoke_config(arch), dtype="float32")
+    mesh = cpu_mesh()
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    shards = shd.param_shardings(cfg, mesh)
+    assert jax.tree.structure(params) == jax.tree.structure(shards)
+    assert all(isinstance(s, NamedSharding) for s in jax.tree.leaves(shards))
+    # congruent trees zip: this is the exact device_put pattern consumers use
+    placed = jax.tree.map(jax.device_put, params, shards)
+    assert jax.tree.structure(placed) == jax.tree.structure(params)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_cache_pspecs_congruent_with_init_cache(arch):
+    cfg = dataclasses.replace(get_smoke_config(arch), dtype="float32")
+    mesh = cpu_mesh()
+    batch = 4
+    tree = jax.eval_shape(lambda: decoder.init_cache(cfg, batch, 32, jnp.float32))
+    specs = shd.cache_pspecs(cfg, mesh, tree, batch)
+    assert jax.tree.structure(tree) == jax.tree.structure(
+        specs, is_leaf=lambda x: isinstance(x, P))
+    # the dryrun zip: struct tree × spec tree -> sharded struct tree
+    structs = jax.tree.map(
+        lambda s, p: jax.ShapeDtypeStruct(
+            s.shape, s.dtype, sharding=NamedSharding(mesh, p)),
+        tree, specs)
+    assert jax.tree.structure(structs) == jax.tree.structure(tree)
+
+
+def test_param_specs_follow_megatron_rules():
+    """On a divisible mesh the name rules shard the intended dims."""
+    cfg = dataclasses.replace(get_smoke_config("mixtral-8x7b"), dtype="float32")
+    devs = np.array(jax.devices()).reshape(1, jax.device_count())
+    mesh = Mesh(devs, ("data", "model"))  # model == device_count
+    msize = int(mesh.shape["model"])
+    specs = shd.param_pspecs(cfg, mesh)
+    shapes = param_shapes(cfg, model_size=msize)
+
+    flat_specs = jax.tree_util.tree_flatten_with_path(
+        specs, is_leaf=lambda x: isinstance(x, P))[0]
+    flat_shapes = jax.tree.leaves(shapes, is_leaf=lambda s: isinstance(s, tuple))
+    for (path, spec), shape in zip(flat_specs, flat_shapes):
+        name = path[-1].key
+        sharded_dims = [i for i, a in enumerate(spec) if a is not None]
+        if msize == 1:
+            assert sharded_dims == [], (name, spec)
+            continue
+        for i in sharded_dims:          # every sharded dim must divide
+            assert shape[i] % msize == 0, (name, shape, spec)
+        if name in ("wq", "wk", "wv") and shape[-1] % msize == 0:
+            assert spec[len(shape) - 1] == "model", (name, spec)
+        if name == "wo" and shape[-2] % msize == 0:
+            assert spec[len(shape) - 2] == "model", (name, spec)
+        if name in ("ln_attn", "ln_mlp", "final_norm", "router"):
+            assert sharded_dims == [], (name, spec)
+
+
+def test_batch_pspecs_cover_train_and_decode_inputs():
+    cfg = dataclasses.replace(get_smoke_config("glm4-9b"), dtype="float32")
+    mesh = cpu_mesh()
+    n_data = int(mesh.shape["data"])
+    train = {
+        "tokens": jax.ShapeDtypeStruct((8 * n_data, 32), jnp.int32),
+        "positions": jax.ShapeDtypeStruct((8 * n_data, 32), jnp.int32),
+        "labels": jax.ShapeDtypeStruct((8 * n_data, 32), jnp.int32),
+    }
+    ps = shd.batch_pspecs(cfg, mesh, train)
+    assert set(ps) == set(train)
+    if n_data > 1:
+        assert ps["tokens"][0] == ("data",)
+    decode = {
+        "tokens": jax.ShapeDtypeStruct((8 * n_data,), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+    }
+    ps = shd.batch_pspecs(cfg, mesh, decode)
+    assert ps["pos"] == P()
+    # M-RoPE positions [3, B, S]: the batch dim is dim 1, never the sections
+    mrope = {"positions": jax.ShapeDtypeStruct((3, 8 * n_data, 32), jnp.int32)}
+    ps = shd.batch_pspecs(cfg, mesh, mrope)
+    assert ps["positions"][0] is None
+
+
+def test_indivisible_dims_fall_back_to_replication():
+    """A model-axis size that divides nothing must yield pure replication."""
+    cfg = dataclasses.replace(
+        get_smoke_config("glm4-9b"), dtype="float32",
+        d_model=60, n_heads=3, n_kv_heads=3, head_dim=20, d_ff=90,
+        vocab_size=255,
+    )
+    shapes = param_shapes(cfg)
+    flat = jax.tree_util.tree_flatten_with_path(
+        shapes, is_leaf=lambda s: isinstance(s, tuple))[0]
+    for path, shape in flat:
+        spec = shd._param_spec(path, shape, "model", 7)  # 7 divides no dim
+        assert all(a is None for a in spec), (path, shape, spec)
+        spec2 = shd._param_spec(path, shape, "model", 2)  # 60/90 divide by 2
+        for i, a in enumerate(spec2):
+            if a is not None:
+                assert shape[i] % 2 == 0, (path, shape, spec2)

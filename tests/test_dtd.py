@@ -1,6 +1,8 @@
 """DTD tests: SC/LC cost formulas, the O(n) solve, numpy/jit agreement."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.dtd import (C_AB, C_P2P, C_URB, long_term_costs,
