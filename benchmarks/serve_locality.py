@@ -1,9 +1,14 @@
 """Framework-level locality benchmark: the paper's technique at serving scale.
 
-Sweeps request locality P over an 8-pod simulated deployment for each
-routing policy (the serving analogue of Fig. 3a), with the SimBackend
-pricing pod steps by the roofline model.  Also reports the wire traffic
-saved by lease stickiness.
+Sweeps request locality P over a simulated multi-pod deployment for each
+(DTD policy × arbitration) pair (the serving analogue of Fig. 3a), with the
+SimBackend pricing pod steps by the roofline model and the engine charging
+wire time from ``price_session_dispatch`` (RTT included).  The winning pair
+is reported against ``repro.dist.locality.ROUTER_DEFAULTS``, which is where
+its thresholds live as the serving-stack defaults.
+
+``--smoke`` (2 pods, 8 sessions, 10 steps) runs the full grid in seconds —
+CI uses it so the sweep can't silently rot.
 """
 from __future__ import annotations
 
@@ -13,18 +18,39 @@ from typing import Dict, List
 import numpy as np
 
 from repro.configs import get_config
+from repro.dist.locality import ROUTER_DEFAULTS
 from repro.serve.engine import MultiPodEngine, Request, SimBackend
 from repro.serve.router import LocalityRouter
 
 POLICIES = ["local", "short", "long"]
 
+# (policy, arbitration) grid: "local" never migrates so arbitration is
+# moot there; every other pair matters — the policy still drives
+# new-session placement (and third-pod redirects under "hybrid") even
+# when the byte model settles the owned-session binary.
+GRID = [
+    ("local", "steps"),
+    ("short", "steps"),
+    ("short", "priced"),
+    ("short", "hybrid"),
+    ("long", "steps"),
+    ("long", "priced"),
+    ("long", "hybrid"),
+]
+
 
 def run_point(arch: str, policy: str, locality: float, *, n_pods: int = 8,
-              n_sessions: int = 256, steps: int = 80, seed: int = 0) -> Dict:
+              n_sessions: int = 256, steps: int = 80, seed: int = 0,
+              arbitration: str = "steps", seeds: int = 1) -> Dict:
+    if seeds > 1:
+        pts = [run_point(arch, policy, locality, n_pods=n_pods,
+                         n_sessions=n_sessions, steps=steps, seed=seed + i,
+                         arbitration=arbitration) for i in range(seeds)]
+        return {k: sum(p[k] for p in pts) / seeds for k in pts[0]}
     cfg = get_config(arch)
     kv_per_tok = 2.0 * 2 * cfg.n_kv_heads * cfg.head_dim * cfg.n_layers \
         if cfg.n_kv_heads else 4096.0 * cfg.n_layers
-    router = LocalityRouter(n_pods, policy=policy,
+    router = LocalityRouter(n_pods, policy=policy, arbitration=arbitration,
                             kv_bytes_per_token=kv_per_tok)
     eng = MultiPodEngine(n_pods, SimBackend(cfg), router)
     rng = np.random.default_rng(seed)
@@ -43,7 +69,21 @@ def run_point(arch: str, policy: str, locality: float, *, n_pods: int = 8,
         "reuse": router.metrics.lease_reuse_rate,
         "transfers": m["transfers"],
         "forwards": m["forwards"],
+        "flips": router.metrics.flips,
     }
+
+
+def pick_winner(rows: List[Dict], localities: List[float]) -> Dict:
+    """Lowest wire at the highest locality, subject to no tokens/s loss
+    (>2%) versus the best thrower at the lowest locality."""
+    lo, hi = min(localities), max(localities)
+    best_tps = max(r["tokens_per_s"] for r in rows if r["locality"] == lo)
+    ok = {(r["policy"], r["arbitration"]) for r in rows
+          if r["locality"] == lo and r["tokens_per_s"] >= 0.98 * best_tps}
+    cand = [r for r in rows if r["locality"] == hi
+            and (r["policy"], r["arbitration"]) in ok]
+    return min(cand or [r for r in rows if r["locality"] == hi],
+               key=lambda r: r["wire_GB"])
 
 
 def main(argv=None) -> List[Dict]:
@@ -51,17 +91,37 @@ def main(argv=None) -> List[Dict]:
     ap.add_argument("--arch", default="mixtral-8x7b")
     ap.add_argument("--localities", nargs="*", type=float,
                     default=[0.0, 0.5, 0.9])
+    ap.add_argument("--pods", type=int, default=8)
+    ap.add_argument("--sessions", type=int, default=256)
+    ap.add_argument("--steps", type=int, default=80)
+    ap.add_argument("--seeds", type=int, default=3,
+                    help="average each cell over this many seeds")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny grid for CI: 2 pods, 8 sessions, 10 steps")
     args = ap.parse_args(argv)
+    if args.smoke:
+        args.pods, args.sessions, args.steps, args.seeds = 2, 8, 10, 1
 
     rows = []
-    print("arch,policy,locality,tokens_per_s,wire_GB,lease_reuse,transfers,forwards")
-    for policy in POLICIES:
+    print("arch,policy,arbitration,locality,tokens_per_s,wire_GB,"
+          "lease_reuse,transfers,forwards,flips")
+    for policy, arbitration in GRID:
         for p in args.localities:
-            r = run_point(args.arch, policy, p)
-            rows.append({"policy": policy, "locality": p, **r})
-            print(f"{args.arch},{policy},{p},{r['tokens_per_s']:.0f},"
-                  f"{r['wire_GB']:.3f},{r['reuse']:.3f},{r['transfers']},"
-                  f"{r['forwards']}", flush=True)
+            r = run_point(args.arch, policy, p, n_pods=args.pods,
+                          n_sessions=args.sessions, steps=args.steps,
+                          arbitration=arbitration, seeds=args.seeds)
+            rows.append({"policy": policy, "arbitration": arbitration,
+                         "locality": p, **r})
+            print(f"{args.arch},{policy},{arbitration},{p},"
+                  f"{r['tokens_per_s']:.0f},{r['wire_GB']:.3f},"
+                  f"{r['reuse']:.3f},{r['transfers']:.0f},{r['forwards']:.0f},"
+                  f"{r['flips']:.0f}", flush=True)
+    w = pick_winner(rows, args.localities)
+    print(f"winner: policy={w['policy']} arbitration={w['arbitration']} "
+          f"(wire_GB={w['wire_GB']:.3f} at locality {w['locality']}) — "
+          f"defaults: repro.dist.locality.ROUTER_DEFAULTS "
+          f"(policy={ROUTER_DEFAULTS.policy}, "
+          f"arbitration={ROUTER_DEFAULTS.arbitration})")
     return rows
 
 

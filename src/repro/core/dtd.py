@@ -173,6 +173,12 @@ class DTD:
         self.cfg = cfg
         self.n_nodes = n_nodes
 
+    def feasible(self, cpu: np.ndarray, node: int) -> bool:
+        """Constraint (3): may ``node`` take on more work?  Always true when
+        overload control is disabled."""
+        return (not self.cfg.enable_overload_ctrl) or \
+            float(cpu[node]) < self.cfg.max_cpu
+
     def decide(
         self,
         origin: int,

@@ -37,6 +37,32 @@ DCN_RTT_S = 1e-3      # cross-pod round-trip (the paper's P2P step constant)
 
 
 # ---------------------------------------------------------------------------
+# Router defaults — the winning thresholds of benchmarks/serve_locality.py
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class RouterDefaults:
+    """Default knobs for :class:`repro.serve.router.LocalityRouter`.
+
+    The values are the winners of the policy×arbitration sweep in
+    ``benchmarks/serve_locality.py`` (8 pods, mixtral-8x7b KV sizes, 3
+    seeds): ``short`` step costs for new-session placement with the priced
+    byte model settling forward-vs-acquire (``priced``) ships the least
+    wire of the grid — 14% less than step-constant arbitration at locality
+    0.9 (wire_GB 0.012 vs 0.014), where it is also ~11% faster — with no
+    tokens/s regression at locality 0.0.
+    """
+
+    policy: str = "short"          # DTD cost policy: "local"|"short"|"long"
+    arbitration: str = "priced"    # "steps" | "priced" | "hybrid"
+    max_cpu: float = 0.85          # constraint (3) threshold
+    freq_tau_ms: float = 500.0     # LC access-frequency decay constant
+
+
+ROUTER_DEFAULTS = RouterDefaults()
+
+
+# ---------------------------------------------------------------------------
 # Session dispatch: forward the request vs. migrate the KV state
 # ---------------------------------------------------------------------------
 

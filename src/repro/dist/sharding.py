@@ -209,3 +209,19 @@ def cache_pspecs(
     if tree.get("body") is not None:
         out["body"] = [layer(c, stacked=True) for c in tree["body"]]
     return out
+
+
+def cache_shardings(
+    cfg: ModelConfig, mesh: Mesh, tree: Dict[str, Any], batch: int
+) -> Dict[str, Any]:
+    """NamedSharding tree congruent with ``decoder.init_cache`` output.
+
+    The serving path (``repro.serve.kvcache.KVStore``) places its slot-ring
+    cache trees with this, so a migrated session's column lands pre-sharded
+    on the target pod's mesh instead of being re-laid-out at first decode.
+    """
+    return jax.tree.map(
+        lambda spec: NamedSharding(mesh, spec),
+        cache_pspecs(cfg, mesh, tree, batch),
+        is_leaf=lambda s: isinstance(s, P),
+    )

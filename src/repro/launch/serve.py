@@ -16,10 +16,11 @@ import jax
 import numpy as np
 
 from repro.configs import get_config, get_smoke_config
+from repro.dist.locality import ROUTER_DEFAULTS
 from repro.models import decoder
 from repro.models.common import init_params
 from repro.serve.engine import MultiPodEngine, RealBackend, Request, SimBackend
-from repro.serve.router import LocalityRouter
+from repro.serve.router import ARBITRATIONS, LocalityRouter
 
 
 def main(argv=None) -> dict:
@@ -28,8 +29,10 @@ def main(argv=None) -> dict:
     ap.add_argument("--preset", default="smoke", choices=["smoke", "full"])
     ap.add_argument("--backend", default="real", choices=["real", "sim"])
     ap.add_argument("--pods", type=int, default=2)
-    ap.add_argument("--policy", default="short",
+    ap.add_argument("--policy", default=ROUTER_DEFAULTS.policy,
                     choices=["local", "short", "long"])
+    ap.add_argument("--arbitration", default=ROUTER_DEFAULTS.arbitration,
+                    choices=list(ARBITRATIONS))
     ap.add_argument("--requests", type=int, default=64)
     ap.add_argument("--sessions", type=int, default=16)
     ap.add_argument("--tokens-per-request", type=int, default=4)
@@ -55,6 +58,7 @@ def main(argv=None) -> dict:
                       if cfg.n_kv_heads else 4096.0 * cfg.n_layers)
 
     router = LocalityRouter(args.pods, policy=args.policy,
+                            arbitration=args.arbitration,
                             kv_bytes_per_token=kv_per_tok)
     eng = MultiPodEngine(args.pods, backend, router)
     rng = np.random.default_rng(args.seed)
@@ -71,7 +75,7 @@ def main(argv=None) -> dict:
     eng.drain()
     m = eng.metrics.as_dict()
     print(f"arch={cfg.name} pods={args.pods} policy={args.policy} "
-          f"locality={args.locality}")
+          f"arbitration={args.arbitration} locality={args.locality}")
     print(f"tokens={m['tokens']} forwards={m['forwards']} "
           f"kv_migrations={m['transfers']} wire={m['wire_GB']:.4f}GB "
           f"lease_reuse={router.metrics.lease_reuse_rate:.3f}")

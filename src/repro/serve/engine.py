@@ -21,9 +21,13 @@ from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.dist.locality import DCN_BW
+from repro.dist.locality import DCN_RTT_S, price_session_dispatch
 from repro.launch.hlo_analysis import HBM_BW
 from .router import LocalityRouter, RouteDecision
+
+# router-clock advance per decode step when the backend reports no decode
+# time (RealBackend): keeps DecayedFrequency decaying deterministically
+REAL_STEP_MS = 1.0
 
 
 @dataclass
@@ -78,7 +82,10 @@ class RealBackend:
         from .kvcache import KVStore
 
         self.cfg, self.ctx, self.params = cfg, ctx, params
-        self.stores = [KVStore(cfg, n_slots, max_len) for _ in range(n_pods)]
+        self.stores = [
+            KVStore(cfg, n_slots, max_len, mesh=getattr(ctx, "mesh", None))
+            for _ in range(n_pods)
+        ]
         self._jnp = jnp
 
         def step(params, caches, tokens, pos):
@@ -166,20 +173,43 @@ class MultiPodEngine:
         self.queues: List[List[Request]] = [[] for _ in range(n_pods)]
         self.session_len: Dict[int, int] = {}
         self.session_home: Dict[int, int] = {}
+        # (latency, serialization) charges per pod since its last step,
+        # split from the priced wire_s; settled in run_step
+        self._pending_wire: List[List[Tuple[float, float]]] = \
+            [[] for _ in range(n_pods)]
+        # per-pod busy clocks: pods decode independently (no cross-pod
+        # barrier), so simulated wall time is the busiest pod's clock
+        self._pod_clock = np.zeros((n_pods,), np.float64)
         self.metrics = EngineMetrics()
 
     def submit(self, req: Request) -> RouteDecision:
         m = self.metrics
         length = self.session_len.get(req.sid, 0)
         dec = self.router.route(req.origin, req.sid, length)
+        src = req.origin if dec.action == "forward" else -1
         if dec.action == "acquire":
             src = self.session_home.get(req.sid, dec.target)
             if src != dec.target:
                 if hasattr(self.backend, "transfer"):
                     shipped = self.backend.transfer(src, dec.target, req.sid)
-                    dec = dataclasses.replace(dec, wire_bytes=max(dec.wire_bytes, shipped))
+                    if shipped > dec.wire_bytes:
+                        # the real cache column outweighed the router's
+                        # estimate: re-price the state move with actual bytes
+                        repriced = price_session_dispatch(
+                            0.0, 0.0, shipped, handoff_bytes=0.0)
+                        dec = dataclasses.replace(
+                            dec, wire_bytes=shipped,
+                            wire_s=repriced.migrate_state_s)
                 else:
                     self.backend.drop(src, req.sid)
+                # the lease move carries the conflict class's pending work
+                # with it (paper §2): re-home queued requests for this
+                # session so the old owner never decodes a departed cache
+                moved = [r for r in self.queues[src] if r.sid == req.sid]
+                if moved:
+                    self.queues[src] = [
+                        r for r in self.queues[src] if r.sid != req.sid]
+                    self.queues[dec.target].extend(moved)
                 m.transfers += 1
         elif dec.action == "forward":
             m.forwards += 1
@@ -189,42 +219,70 @@ class MultiPodEngine:
         self.session_home[req.sid] = dec.target
         self.queues[dec.target].append(req)
         m.wire_bytes += dec.wire_bytes
-        self.metrics.sim_time_s += dec.wire_bytes / DCN_BW
+        if dec.wire_s > 0:
+            # receiver waits out the RTT; byte serialization occupies the
+            # NIC at both endpoints of the transfer
+            serial_s = max(0.0, dec.wire_s - DCN_RTT_S)
+            self._pending_wire[dec.target].append((DCN_RTT_S, serial_s))
+            if 0 <= src < self.n_pods and src != dec.target:
+                self._pending_wire[src].append((0.0, serial_s))
         return dec
+
+    def _wire_time_s(self, pod: int) -> float:
+        """Settle the pod's transfers since its last step.
+
+        Each entry is (latency, serialization) split out of the priced plan
+        time from ``price_session_dispatch``.  Concurrent RPCs overlap
+        their latency but serialize on the pod's NIC: one RTT (if the pod
+        awaits any inbound data), summed byte time.
+        """
+        arrivals = self._pending_wire[pod]
+        if not arrivals:
+            return 0.0
+        self._pending_wire[pod] = []
+        return max(rtt for rtt, _ in arrivals) + sum(s for _, s in arrivals)
 
     def run_step(self) -> None:
         """One decode step on every pod over its queued sessions."""
         m = self.metrics
-        pod_times = []
+        step_t = 0.0
         for pod in range(self.n_pods):
+            # inbound KV/requests must land before the pod decodes them
+            pod_t = self._wire_time_s(pod)
             reqs = self.queues[pod]
-            if not reqs:
-                pod_times.append(0.0)
-                continue
-            sids = []
-            for r in reqs:
-                if r.n_tokens > 0:
-                    sids.append(r.sid)
-            sids = list(dict.fromkeys(sids))
-            if hasattr(self.backend, "decode_time_s"):
-                pod_times.append(self.backend.decode_time_s(
-                    pod, sids, self.router.kv_bytes_per_token))
+            if reqs:
+                sids = []
+                for r in reqs:
+                    if r.n_tokens > 0:
+                        sids.append(r.sid)
+                sids = list(dict.fromkeys(sids))
+                if hasattr(self.backend, "decode_time_s"):
+                    pod_t += self.backend.decode_time_s(
+                        pod, sids, self.router.kv_bytes_per_token)
                 self.backend.step(pod, sids)
-            else:
-                self.backend.step(pod, sids)
-                pod_times.append(0.0)
-            for r in reqs:
-                r.n_tokens -= 1
-                self.session_len[r.sid] = self.session_len.get(r.sid, 0) + 1
-                m.tokens += 1
-            self.queues[pod] = [r for r in reqs if r.n_tokens > 0]
-        # pods run in parallel; the step takes as long as the slowest pod
-        m.sim_time_s += max(pod_times) if pod_times else 0.0
+                for r in reqs:
+                    r.n_tokens -= 1
+                # the pod decodes each *session* once per step, however many
+                # requests share it — advance session_len in lockstep with
+                # the backend's cache length so KV migrations are priced on
+                # real sizes
+                for sid in sids:
+                    self.session_len[sid] = self.session_len.get(sid, 0) + 1
+                    m.tokens += 1
+                self.queues[pod] = [r for r in reqs if r.n_tokens > 0]
+            self._pod_clock[pod] += pod_t
+            step_t = max(step_t, pod_t)
+        # pods run in parallel with no cross-pod barrier: simulated wall
+        # time is the busiest pod's accumulated clock
+        m.sim_time_s = float(np.max(self._pod_clock))
+        self.router.tick(1000.0 * step_t if step_t > 0 else REAL_STEP_MS)
         m.steps += 1
-        # queue depth -> CPU_i statistic for constraint (3)
-        cap = max(1, max((len(q) for q in self.queues), default=1))
-        self.router.observe_cpu(
-            np.asarray([len(q) / max(8.0, cap) for q in self.queues]))
+        # queue depth -> CPU_i statistic for constraint (3): backlog relative
+        # to the fleet mean, so the valve trips on genuine stragglers (~2x
+        # the mean) instead of always flagging whichever pod is busiest
+        depths = np.asarray([float(len(q)) for q in self.queues])
+        cap = max(8.0, 2.0 * float(depths.mean()))
+        self.router.observe_cpu(depths / cap)
 
     def drain(self, max_steps: int = 10_000) -> None:
         steps = 0

@@ -28,11 +28,18 @@ class Session:
 
 class KVStore:
     def __init__(self, cfg: ModelConfig, n_slots: int, max_len: int,
-                 dtype=jnp.bfloat16) -> None:
+                 dtype=jnp.bfloat16, *, mesh=None) -> None:
         self.cfg = cfg
         self.n_slots = n_slots
         self.max_len = max_len
+        self.mesh = mesh
         self.caches = decoder.init_cache(cfg, n_slots, max_len, dtype)
+        if mesh is not None:
+            # place the slot-ring trees per the ownership ledger, so imported
+            # sessions land pre-sharded on this pod's mesh
+            from repro.dist.sharding import cache_shardings
+            self.caches = jax.device_put(
+                self.caches, cache_shardings(cfg, mesh, self.caches, n_slots))
         self.free_slots: List[int] = list(range(n_slots))[::-1]
         self.sessions: Dict[int, Session] = {}
 

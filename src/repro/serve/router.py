@@ -14,10 +14,28 @@ its lease owner.  Per request the router solves the paper's ILP
 * constraint (3) — pods above ``max_cpu`` (queue depth / capacity) are
   not eligible migration targets: the paper's own straggler valve.
 
+The step-constant ILP and the byte model can disagree: the SC constants say
+"forward to the owner" regardless of how many bytes the alternatives put on
+the DCN, and its all-overloaded fallback acquires at the origin even when
+that ships megabytes of KV.  ``arbitration`` selects who settles the
+forward-vs-acquire binary for an owned session:
+
+* ``steps``  — the DTD step constants alone (legacy behaviour);
+* ``priced`` — ``price_session_dispatch.prefer_migration`` alone: forward
+  when the work description is lighter than the KV state, acquire
+  otherwise, with constraint (3) flipping the verdict only when the
+  preferred side is overloaded and the other is not;
+* ``hybrid`` — the DTD picks first; when it redirects to a third pod
+  (overload valve, LC attractor) that stands, but whenever its choice is
+  the plain origin/owner binary the byte model breaks the disagreement.
+
 The router maintains the fine-grained ownership ledger with per-session
 *lease stickiness*: ownership only moves when the DTD decides the state
 should travel, so repeated requests on a session are certified locally —
-the serving analogue of FGL lease reuse.
+the serving analogue of FGL lease reuse.  Per-session access frequencies
+(the LC inputs) are :class:`repro.core.stats.DecayedFrequency` counters
+decayed on the router clock — the engine advances it via :meth:`tick` with
+simulated step time, so the attractor is rate-based, not per-touch.
 """
 from __future__ import annotations
 
@@ -28,7 +46,9 @@ import numpy as np
 
 from repro.core.dtd import DTD, DTDConfig
 from repro.core.stats import DecayedFrequency
-from repro.dist.locality import price_session_dispatch
+from repro.dist.locality import ROUTER_DEFAULTS, price_session_dispatch
+
+ARBITRATIONS = ("steps", "priced", "hybrid")
 
 
 @dataclass
@@ -36,7 +56,7 @@ class RouteDecision:
     target: int                  # pod that will run the decode
     action: str                  # "local" | "forward" | "acquire"
     wire_bytes: float = 0.0
-    wire_s: float = 0.0
+    wire_s: float = 0.0          # DCN time of the chosen plan, RTT included
 
 
 @dataclass
@@ -46,6 +66,7 @@ class RouterMetrics:
     forwards: int = 0
     acquires: int = 0
     wire_bytes: float = 0.0
+    flips: int = 0               # byte model overrode the step-constant verdict
 
     @property
     def lease_reuse_rate(self) -> float:
@@ -57,37 +78,44 @@ class LocalityRouter:
         self,
         n_pods: int,
         *,
-        policy: str = "short",
-        max_cpu: float = 0.85,
+        policy: str = ROUTER_DEFAULTS.policy,
+        arbitration: str = ROUTER_DEFAULTS.arbitration,
+        max_cpu: float = ROUTER_DEFAULTS.max_cpu,
         kv_bytes_per_token: float = 2048.0,
         request_bytes: float = 4096.0,
         response_bytes: float = 1024.0,
-        freq_tau_ms: float = 500.0,
+        freq_tau_ms: float = ROUTER_DEFAULTS.freq_tau_ms,
     ) -> None:
+        if arbitration not in ARBITRATIONS:
+            raise ValueError(f"unknown arbitration {arbitration!r}")
         self.n_pods = n_pods
         self.policy = policy
+        self.arbitration = arbitration
         self.dtd = DTD(DTDConfig(policy=policy, max_cpu=max_cpu), n_pods)
         self.owner: Dict[int, int] = {}          # session -> owning pod
-        self.freq = DecayedFrequency(n_pods, 1, tau_ms=freq_tau_ms)
-        self._freq_by_sid: Dict[int, np.ndarray] = {}
+        self.freq_tau_ms = freq_tau_ms
+        self._freq_by_sid: Dict[int, DecayedFrequency] = {}
         self.cpu = np.zeros((n_pods,), np.float64)
         self.kv_bytes_per_token = kv_bytes_per_token
         self.request_bytes = request_bytes
         self.response_bytes = response_bytes
         self.metrics = RouterMetrics()
-        self._now = 0.0
+        self._now = 0.0              # router clock, ms (advanced by tick())
 
     # -- stats ingestion -----------------------------------------------------
     def observe_cpu(self, cpu: np.ndarray) -> None:
         self.cpu[:] = cpu
 
     def tick(self, dt_ms: float) -> None:
+        """Advance the router clock; session touch rates decay against it."""
         self._now += dt_ms
 
     def _touch(self, origin: int, sid: int) -> None:
-        f = self._freq_by_sid.setdefault(sid, np.zeros((self.n_pods,), np.float64))
-        f *= 0.98
-        f[origin] += 1.0
+        f = self._freq_by_sid.get(sid)
+        if f is None:
+            f = self._freq_by_sid[sid] = DecayedFrequency(
+                self.n_pods, 1, tau_ms=self.freq_tau_ms)
+        f.record(self._now, origin, (0,))
 
     # -- the decision ----------------------------------------------------------
     def route(self, origin: int, sid: int, session_len: int) -> RouteDecision:
@@ -100,6 +128,12 @@ class LocalityRouter:
             m.local_hits += 1
             return RouteDecision(origin, "local")
 
+        kv_bytes = session_len * self.kv_bytes_per_token
+        # request/response sizes are already bytes, not tokens
+        costs = price_session_dispatch(
+            self.request_bytes, self.response_bytes, kv_bytes,
+            wire_bytes_per_token=1.0)
+
         if owner < 0:
             # new session: place at the DTD's choice (long-term policy may
             # pick the attractor; default to origin)
@@ -111,32 +145,54 @@ class LocalityRouter:
             m.forwards += 1
             wire = self.request_bytes + self.response_bytes
             m.wire_bytes += wire
-            return RouteDecision(target, "forward", wire)
+            return RouteDecision(target, "forward", wire, costs.migrate_work_s)
 
         target = self._dtd_target(origin, sid, owner)
-        kv_bytes = session_len * self.kv_bytes_per_token
-        # request/response sizes are already bytes, not tokens
-        costs = price_session_dispatch(
-            self.request_bytes, self.response_bytes, kv_bytes,
-            wire_bytes_per_token=1.0)
-        if target == owner:
+        action = "forward" if target == owner else "acquire"
+        if self.arbitration != "steps":
+            action, target = self._arbitrate(origin, owner, target, action, costs)
+
+        if action == "forward":
             # migrate the work to the state owner
             m.forwards += 1
-            m.wire_bytes += self.request_bytes + self.response_bytes
+            m.wire_bytes += costs.work_bytes
             return RouteDecision(owner, "forward",
-                                 self.request_bytes + self.response_bytes,
-                                 costs.migrate_work_s)
+                                 costs.work_bytes, costs.migrate_work_s)
         # migrate the state to the target (lease + KV move)
         self.owner[sid] = target
         m.acquires += 1
         m.wire_bytes += kv_bytes
         return RouteDecision(target, "acquire", kv_bytes, costs.migrate_state_s)
 
+    def _arbitrate(self, origin: int, owner: int, target: int, action: str,
+                   costs) -> Tuple[str, int]:
+        """Settle forward-vs-acquire with the priced verdict.
+
+        ``prefer_migration`` (forward the work) wins unless the preferred
+        side violates constraint (3) while the other side doesn't; when both
+        sides are overloaded the cheap-wire plan is the fallback — this is
+        where the step-constant solver's acquire-at-origin fallback ships
+        whole KV caches for nothing.
+        """
+        if self.arbitration == "hybrid" and target not in (origin, owner):
+            return action, target    # DTD redirect (valve / attractor) stands
+        fwd_ok = self.dtd.feasible(self.cpu, owner)
+        acq_ok = self.dtd.feasible(self.cpu, origin)
+        if costs.prefer_migration:
+            byte_action = ("forward", owner) if fwd_ok or not acq_ok \
+                else ("acquire", origin)
+        else:
+            byte_action = ("acquire", origin) if acq_ok or not fwd_ok \
+                else ("forward", owner)
+        if byte_action[0] != action:
+            self.metrics.flips += 1
+        return byte_action
+
     def _dtd_target(self, origin: int, sid: int, owner: int) -> int:
         f = self._freq_by_sid.get(sid)
         freq = np.zeros((self.n_pods, 1), np.float64)
         if f is not None:
-            freq[:, 0] = f
+            freq[:, 0] = f.rates(self._now)[:, 0]
         return self.dtd.decide(
             origin=origin,
             ccs=frozenset({0}),
