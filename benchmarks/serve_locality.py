@@ -73,6 +73,58 @@ def run_point(arch: str, policy: str, locality: float, *, n_pods: int = 8,
     }
 
 
+def run_long_context(*, smoke: bool, seed: int = 0) -> Dict:
+    """Long-context cell: real decode over a seq-bearing host mesh.
+
+    Small model, long ``max_len``, seq axis on — exercises the seq-sharded
+    KV layout end to end: ``KVStore`` placement via ``cache_shardings``,
+    sharded decode steps, export/import migrations between pods, and the
+    ``1/seq_shards`` per-hop pricing in the router.  On a 1-device CI host
+    the seq axis degrades to size 1 through the divisibility guards, so the
+    same code path runs everywhere.
+    """
+    import dataclasses
+
+    import jax
+
+    from repro.configs import get_smoke_config
+    from repro.launch.mesh import make_host_mesh
+    from repro.models import decoder
+    from repro.models.common import init_params
+    from repro.serve.engine import RealBackend
+
+    cfg = dataclasses.replace(get_smoke_config("glm4-9b"), dtype="float32")
+    max_len = 256 if smoke else 2048
+    mesh = make_host_mesh(model=1, seq=jax.device_count())
+    seq_axis = "seq" if "seq" in mesh.axis_names else None
+    ctx = decoder.RunCtx(mesh=mesh, batch_axes=("data",), use_kernel="ref",
+                         seq_axis=seq_axis)
+    params = init_params(cfg, jax.random.PRNGKey(seed))
+    backend = RealBackend(cfg, ctx, params, n_pods=2, n_slots=8,
+                          max_len=max_len)
+    router = LocalityRouter(2, policy="short", arbitration="priced",
+                            kv_bytes_per_token=256.0,
+                            seq_shards=backend.seq_shards)
+    eng = MultiPodEngine(2, backend, router)
+    rng = np.random.default_rng(seed)
+    for _ in range(6):
+        for _ in range(4):
+            sid = int(rng.integers(4))
+            origin = sid % 2 if rng.random() < 0.5 else int(rng.integers(2))
+            eng.submit(Request(sid=sid, origin=origin, n_tokens=2))
+        eng.run_step()
+    eng.drain()
+    m = eng.metrics.as_dict()
+    row = {"seq_shards": backend.seq_shards, "max_len": max_len,
+           "tokens": m["tokens"], "wire_GB": m["wire_GB"],
+           "transfers": m["transfers"], "forwards": m["forwards"]}
+    print(f"long-context,glm4-9b,seq_shards={row['seq_shards']:g},"
+          f"max_len={max_len},tokens={row['tokens']:.0f},"
+          f"transfers={row['transfers']:.0f},forwards={row['forwards']:.0f},"
+          f"wire_GB={row['wire_GB']:.6f}", flush=True)
+    return row
+
+
 def pick_winner(rows: List[Dict], localities: List[float]) -> Dict:
     """Lowest wire at the highest locality, subject to no tokens/s loss
     (>2%) versus the best thrower at the lowest locality."""
@@ -116,6 +168,9 @@ def main(argv=None) -> List[Dict]:
                   f"{r['tokens_per_s']:.0f},{r['wire_GB']:.3f},"
                   f"{r['reuse']:.3f},{r['transfers']:.0f},{r['forwards']:.0f},"
                   f"{r['flips']:.0f}", flush=True)
+    # long-context cell: the real seq-sharded decode + migrate path (small
+    # model, long max_len, seq axis on) — keeps the new layout running in CI
+    run_long_context(smoke=args.smoke)
     w = pick_winner(rows, args.localities)
     print(f"winner: policy={w['policy']} arbitration={w['arbitration']} "
           f"(wire_GB={w['wire_GB']:.3f} at locality {w['locality']}) — "

@@ -335,6 +335,12 @@ class Cluster:
         if target != node and self.gcs.alive(target) and self.cfg.forward.may_forward(txn.forwards):
             txn.forwards += 1
             self.metrics.forwards += 1
+            # record the forward target NOW: if it fails while the message is
+            # in flight (the GCS drops p2p to dead nodes), the view-change
+            # handler must still see exec_node == failed to restart this
+            # transaction — waiting for the target's _certify to set it would
+            # wedge the originating thread forever
+            txn.exec_node = target
             self.gcs.p2p_send(
                 node,
                 target,

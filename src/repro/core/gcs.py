@@ -130,6 +130,11 @@ class SimGCS:
         cb = table.get(node)
         if cb is None:
             return
+        # liveness is re-checked at delivery time: a message in flight to a
+        # node that crashes mid-flight is dropped, never processed by the
+        # dead member (fail-stop) — senders recover via the view change
         self.events.schedule(
-            steps * self.lat.step_ms + extra_ms, (lambda c=cb, m=msg, s=sender: c(m, s))
+            steps * self.lat.step_ms + extra_ms,
+            (lambda c=cb, m=msg, s=sender, n=node:
+             c(m, s) if self._alive[n] else None),
         )

@@ -71,5 +71,8 @@ class CpuMeter:
         assert self.busy >= 0
 
     def utilization(self, t: float) -> float:
+        # extra_load is already folded into the EWMA target by _advance;
+        # adding it here again would double-count the injected load and trip
+        # the constraint-(3) valve at ~half the configured threshold
         self._advance(t)
-        return min(1.0, self.value + self.extra_load)
+        return min(1.0, self.value)

@@ -74,6 +74,12 @@ class SessionDispatchCost:
     the transaction to the lease owner).  ``migrate_state_s`` — ship the KV
     cache to the origin and take ownership (paper: lease acquisition).
     ``prefer_migration`` is True when forwarding the work wins.
+
+    ``state_hop_bytes`` is the heaviest single src-shard → dst-shard hop of
+    the state move: when the KV cache is seq-sharded over ``seq_shards``
+    devices per pod, the shards cross the DCN in parallel over distinct NIC
+    pairs, so the move serializes on ``state_bytes / seq_shards`` per hop
+    (``state_bytes`` stays the total put on the wire).
     """
 
     migrate_work_s: float
@@ -81,6 +87,11 @@ class SessionDispatchCost:
     work_bytes: float
     state_bytes: float
     prefer_migration: bool
+    state_hop_bytes: float = -1.0     # default: filled to state_bytes
+
+    def __post_init__(self):
+        if self.state_hop_bytes < 0:
+            object.__setattr__(self, "state_hop_bytes", self.state_bytes)
 
     @property
     def wire_bytes(self) -> float:
@@ -97,6 +108,7 @@ def price_session_dispatch(
     handoff_bytes: float = 512.0,
     dcn_bw: float = DCN_BW,
     rtt_s: float = DCN_RTT_S,
+    seq_shards: float = 1,
 ) -> SessionDispatchCost:
     """Price forwarding a session's work vs. migrating its KV state.
 
@@ -106,17 +118,28 @@ def price_session_dispatch(
     ``kv_state_bytes`` is the session's KV-cache footprint, plus a fixed
     ``handoff_bytes`` for the ownership record — the paper's AB+URB round.
     Both plans pay one ``rtt_s``, so the verdict reduces to bytes.
+
+    ``seq_shards`` > 1 models a seq-sharded cache column (the long-context
+    layout of :mod:`repro.dist.sharding`): the column leaves as ``seq_shards``
+    parallel shard-to-shard transfers, so the state plan serializes on
+    ``1/seq_shards`` of the KV bytes per hop.  Fractional values are the
+    byte-weighted effective divisor of a partially-sharded cache (hybrid
+    attn+mamba trees — see ``KVStore.seq_shards``).  Total wire bytes are
+    unchanged — only the time (and therefore the verdict) moves.
     """
+    seq_shards = max(1.0, float(seq_shards))
     work_bytes = (prompt_tokens + decode_tokens) * wire_bytes_per_token
     state_bytes = kv_state_bytes + handoff_bytes
+    state_hop_bytes = kv_state_bytes / seq_shards + handoff_bytes
     migrate_work_s = rtt_s + work_bytes / dcn_bw
-    migrate_state_s = rtt_s + state_bytes / dcn_bw
+    migrate_state_s = rtt_s + state_hop_bytes / dcn_bw
     return SessionDispatchCost(
         migrate_work_s=migrate_work_s,
         migrate_state_s=migrate_state_s,
         work_bytes=work_bytes,
         state_bytes=state_bytes,
         prefer_migration=migrate_work_s < migrate_state_s,
+        state_hop_bytes=state_hop_bytes,
     )
 
 

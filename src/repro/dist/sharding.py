@@ -17,10 +17,16 @@ whose axes are split into *batch* axes (pure data parallelism — ``pod``,
   batch dim over the batch axes; GQA KV caches additionally shard the
   kv-head dim over the model axis, mirroring the ``wk``/``wv`` column
   sharding so decode reads stay local to the head's owner.
+* the *sequence* dim of attention KV caches (GQA ``k``/``v``, MLA
+  ``c_kv``/``k_pe``) shards over the optional ``seq`` mesh axis when one is
+  present — the long-context rule: a migrated 128k-token session's cache
+  column is split into ``seq`` chunks instead of landing on one shard, and
+  :func:`repro.dist.locality.price_session_dispatch` prices the migration
+  at ``1/seq_shards`` of the bytes per hop.
 
 Every rule is guarded by divisibility: a dim that the mesh doesn't divide
 is replicated rather than rejected, so smoke meshes (1×1) and production
-meshes (16×16, 2×16×16) use one code path.
+meshes (16×16, 2×16×16, 4×4×16 with a seq axis) use one code path.
 """
 from __future__ import annotations
 
@@ -33,6 +39,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.models.common import ModelConfig, param_shapes
 
 MODEL_AXIS = "model"
+SEQ_AXIS = "seq"
 
 # projections whose *last* dim is feature-parallel (column-parallel)
 _COL_PARALLEL = {"wq", "wk", "wv", "wq_b", "wkv_b", "w_in", "w_gate", "w_up",
@@ -43,21 +50,34 @@ _ROW_PARALLEL = {"wo", "w_down", "w_out"}
 
 @dataclass(frozen=True)
 class MeshAxes:
-    """A mesh's axis names split into batch (data-parallel) and model."""
+    """A mesh's axis names split into batch (data-parallel), model, and seq.
+
+    The ``seq`` axis (when the mesh exposes one) shards the sequence dim of
+    long KV caches; it never participates in batch data-parallelism.
+    """
 
     batch: Tuple[str, ...]
     model: str = MODEL_AXIS
+    seq: Optional[str] = None
 
     @classmethod
     def for_mesh(cls, mesh: Mesh) -> "MeshAxes":
         names = tuple(mesh.axis_names)
-        if MODEL_AXIS in names:
-            return cls(batch=tuple(a for a in names if a != MODEL_AXIS))
-        # no model axis: a pure data-parallel mesh, never megatron sharding
-        return cls(batch=names)
+        seq = SEQ_AXIS if SEQ_AXIS in names else None
+        # axes that are neither model nor seq are pure data parallelism; a
+        # mesh without a model axis never gets megatron sharding
+        return cls(
+            batch=tuple(a for a in names if a not in (MODEL_AXIS, SEQ_AXIS)),
+            seq=seq,
+        )
 
     def model_size(self, mesh: Mesh) -> int:
         return int(dict(mesh.shape).get(self.model, 1))
+
+    def seq_size(self, mesh: Mesh) -> int:
+        if self.seq is None:
+            return 1
+        return int(dict(mesh.shape).get(self.seq, 1))
 
 
 def _divisible_batch_axes(
@@ -166,16 +186,50 @@ def batch_pspecs(
 # KV / SSM caches
 # ---------------------------------------------------------------------------
 
-def _cache_leaf_spec(path, leaf, bdim: int, baxes, model: str, msize: int) -> P:
+# attention-cache leaves whose dim right after batch is the sequence dim;
+# ndim relative to the batch dim disambiguates them from same-named params
+_SEQ_CACHE_NDIM = {"k": 4, "v": 4,          # GQA [.., B, S, n_kv, head_dim]
+                   "c_kv": 3, "k_pe": 3}    # MLA [.., B, S, lat]
+
+
+def kv_buffer_spec(shape: Sequence[int], *, bdim: int, batch,
+                   model: str = MODEL_AXIS, msize: int = 1,
+                   seq: Optional[str] = None, ssize: int = 1) -> P:
+    """Layout rule for one attention KV buffer ``[.., B, S, (n_kv, ) D]``.
+
+    The single source of the KV-cache layout: batch at ``bdim``, the
+    sequence dim right after it over the ``seq`` axis (long-context rule),
+    and — for 4-dim GQA buffers — kv heads over the model axis, mirroring
+    the ``wk``/``wv`` column sharding.  Both the ledger
+    (:func:`cache_pspecs`) and the in-step activation constraints
+    (``repro.models.attention._shard_kv``) call this, so the placement a
+    ``KVStore`` allocates and the constraint GSPMD sees inside the jitted
+    decode step can never drift apart.
+    """
+    shape = tuple(shape)
+    spec: List[Any] = [None] * len(shape)
+    if batch and len(shape) > bdim:
+        spec[bdim] = batch
+    if len(shape) == bdim + 4 and msize > 1 and shape[bdim + 2] % msize == 0:
+        spec[bdim + 2] = model
+    if seq is not None and ssize > 1 and len(shape) > bdim + 1 and \
+            shape[bdim + 1] % ssize == 0:
+        spec[bdim + 1] = seq
+    return P(*spec)
+
+
+def _cache_leaf_spec(path, leaf, bdim: int, baxes, model: str, msize: int,
+                     seq: Optional[str] = None, ssize: int = 1) -> P:
     name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
     shape = tuple(leaf.shape)
+    # attention KV buffers take the full layout rule; everything else (the
+    # mamba conv/ssm state carries no seq dim) shards batch only
+    if len(shape) == bdim + _SEQ_CACHE_NDIM.get(name, -1):
+        return kv_buffer_spec(shape, bdim=bdim, batch=baxes, model=model,
+                              msize=msize, seq=seq, ssize=ssize)
     spec: List[Any] = [None] * len(shape)
     if baxes and len(shape) > bdim:
         spec[bdim] = baxes
-    # GQA caches [.., batch, len, n_kv, head_dim]: kv heads follow wk/wv
-    if name in ("k", "v") and len(shape) == bdim + 4 and \
-            msize > 1 and shape[bdim + 2] % msize == 0:
-        spec[bdim + 2] = model
     return P(*spec)
 
 
@@ -192,12 +246,14 @@ def cache_pspecs(
     """
     ax = MeshAxes.for_mesh(mesh)
     msize = ax.model_size(mesh)
+    ssize = ax.seq_size(mesh)
     baxes = _divisible_batch_axes(batch, ax.batch, mesh)
 
     def layer(entry: Any, stacked: bool) -> Any:
         return jax.tree_util.tree_map_with_path(
             lambda p, l: _cache_leaf_spec(
-                p, l, 1 if stacked else 0, baxes, ax.model, msize),
+                p, l, 1 if stacked else 0, baxes, ax.model, msize,
+                ax.seq, ssize),
             entry,
         )
 

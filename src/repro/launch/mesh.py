@@ -10,8 +10,14 @@ from __future__ import annotations
 import jax
 
 
-def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+def make_production_mesh(*, multi_pod: bool = False,
+                         seq: int = 1) -> jax.sharding.Mesh:
     """16×16 chips per pod; the multi-pod mesh prepends a 2-pod axis.
+
+    ``seq`` > 1 splits the data axis into ``data × seq`` (e.g. ``seq=4``
+    yields a 4×4×16 pod) so long-context KV caches shard their sequence
+    dim (:mod:`repro.dist.sharding`'s long-context rule) without changing
+    the chip count per pod.
 
     With the dry-run's 512 placeholder devices the single-pod mesh uses the
     first 256 (one pod's worth), so both meshes are constructible in one
@@ -19,8 +25,15 @@ def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     """
     import numpy as np
 
-    shape = (2, 16, 16) if multi_pod else (16, 16)
-    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    if 16 % seq:
+        raise ValueError(f"seq axis {seq} must divide the 16-wide data axis")
+    data = 16 // seq
+    if seq > 1:
+        shape = (2, data, seq, 16) if multi_pod else (data, seq, 16)
+        axes = (("pod",) if multi_pod else ()) + ("data", "seq", "model")
+    else:
+        shape = (2, 16, 16) if multi_pod else (16, 16)
+        axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     n = int(np.prod(shape))
     devs = jax.devices()
     if len(devs) < n:
@@ -32,8 +45,19 @@ def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     return jax.sharding.Mesh(np.asarray(devs[:n]).reshape(shape), axes)
 
 
-def make_host_mesh(model: int = 1) -> jax.sharding.Mesh:
-    """Tiny mesh over however many (real) devices exist — smoke tests."""
+def make_host_mesh(model: int = 1, seq: int = 1) -> jax.sharding.Mesh:
+    """Tiny mesh over however many (real) devices exist — smoke tests.
+
+    ``seq`` > 1 inserts a ``seq`` axis between data and model (capped at
+    what the device count allows), for exercising the long-context KV
+    layout on host devices.
+    """
     n = jax.device_count()
     model = min(model, n)
+    seq = max(1, min(seq, n // model))
+    while (n // model) % seq:
+        seq -= 1                      # largest feasible seq axis <= requested
+    if seq > 1:
+        return jax.make_mesh(
+            (n // (model * seq), seq, model), ("data", "seq", "model"))
     return jax.make_mesh((n // model, model), ("data", "model"))

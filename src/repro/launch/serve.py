@@ -38,6 +38,9 @@ def main(argv=None) -> dict:
     ap.add_argument("--tokens-per-request", type=int, default=4)
     ap.add_argument("--locality", type=float, default=0.8)
     ap.add_argument("--max-len", type=int, default=256)
+    ap.add_argument("--seq-axis", type=int, default=0, metavar="N",
+                    help="shard KV seq dims over an N-way seq mesh axis "
+                         "(0 = off); the sim backend uses N for pricing only")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -47,19 +50,30 @@ def main(argv=None) -> dict:
         raise SystemExit(f"{args.arch} is encoder-only: no decode serving")
 
     if args.backend == "real":
-        ctx = decoder.RunCtx(mesh=None, use_kernel="auto")
+        mesh = None
+        seq_axis = None
+        if args.seq_axis > 0:
+            from repro.launch.mesh import make_host_mesh
+            mesh = make_host_mesh(model=1, seq=args.seq_axis)
+            if "seq" in mesh.axis_names:
+                seq_axis = "seq"
+        ctx = decoder.RunCtx(mesh=mesh, batch_axes=("data",),
+                             use_kernel="auto", seq_axis=seq_axis)
         params = init_params(cfg, jax.random.PRNGKey(args.seed))
         backend = RealBackend(cfg, ctx, params, n_pods=args.pods,
                               n_slots=max(8, args.sessions), max_len=args.max_len)
         kv_per_tok = 256.0
+        seq_shards = backend.seq_shards
     else:
         backend = SimBackend(cfg)
         kv_per_tok = (2.0 * 2 * cfg.n_kv_heads * cfg.head_dim * cfg.n_layers
                       if cfg.n_kv_heads else 4096.0 * cfg.n_layers)
+        seq_shards = max(1, args.seq_axis)
 
     router = LocalityRouter(args.pods, policy=args.policy,
                             arbitration=args.arbitration,
-                            kv_bytes_per_token=kv_per_tok)
+                            kv_bytes_per_token=kv_per_tok,
+                            seq_shards=seq_shards)
     eng = MultiPodEngine(args.pods, backend, router)
     rng = np.random.default_rng(args.seed)
     submitted = 0
@@ -75,7 +89,8 @@ def main(argv=None) -> dict:
     eng.drain()
     m = eng.metrics.as_dict()
     print(f"arch={cfg.name} pods={args.pods} policy={args.policy} "
-          f"arbitration={args.arbitration} locality={args.locality}")
+          f"arbitration={args.arbitration} locality={args.locality} "
+          f"seq_shards={seq_shards:g}")
     print(f"tokens={m['tokens']} forwards={m['forwards']} "
           f"kv_migrations={m['transfers']} wire={m['wire_GB']:.4f}GB "
           f"lease_reuse={router.metrics.lease_reuse_rate:.3f}")

@@ -36,6 +36,29 @@ def _cache_update(buf: jax.Array, new: jax.Array, index) -> jax.Array:
     )(buf, new, index.astype(jnp.int32))
 
 
+def _shard_kv(ctx, arr: jax.Array) -> jax.Array:
+    """Constrain a KV buffer [B, S, ...] onto the ctx mesh's cache layout.
+
+    Delegates to :func:`repro.dist.sharding.kv_buffer_spec` — the same rule
+    ``cache_pspecs`` allocates with — so the in-step constraint and the
+    ``KVStore`` placement cannot drift apart.  With the constraint inside
+    the jitted step, GSPMD keeps the cache resident in its sharded
+    placement across decode steps and partitions the score/context
+    products over the seq shards, gathering only the O(S·d) softmax
+    statistics instead of re-laying-out the cache.
+    """
+    if ctx is None or ctx.mesh is None:
+        return arr
+    from repro.dist.sharding import kv_buffer_spec
+
+    spec = kv_buffer_spec(
+        arr.shape, bdim=0, batch=ctx.batch_axes,
+        model=ctx.model_axis, msize=ctx.model_size,
+        seq=ctx.seq_axis, ssize=ctx.seq_size)
+    return jax.lax.with_sharding_constraint(
+        arr, jax.sharding.NamedSharding(ctx.mesh, spec))
+
+
 # ---------------------------------------------------------------------------
 # Masking
 # ---------------------------------------------------------------------------
@@ -184,8 +207,8 @@ def gqa_attention(
         # decode: append to the cache ring.  cache_index is a scalar (all
         # sequences aligned) or a [B] vector (continuous batching).
         b = x.shape[0]
-        k_all = _cache_update(cache["k"], k, cache_index)
-        v_all = _cache_update(cache["v"], v, cache_index)
+        k_all = _shard_kv(ctx, _cache_update(cache["k"], k, cache_index))
+        v_all = _shard_kv(ctx, _cache_update(cache["v"], v, cache_index))
         if return_cache:
             new_cache = {"k": k_all, "v": v_all}
         kv_pos = jnp.arange(cache["k"].shape[1], dtype=jnp.int32)[None, :]
@@ -203,7 +226,9 @@ def gqa_attention(
         )
     else:
         if return_cache:
-            new_cache = {"k": k, "v": v}
+            # the prefill cache leaves in the long-context layout (seq
+            # sharded) even though the score product below keeps k/v whole
+            new_cache = {"k": _shard_kv(ctx, k), "v": _shard_kv(ctx, v)}
         out = sdpa(
             q, k, v,
             q_positions=q_pos, kv_positions=q_pos,
@@ -238,6 +263,7 @@ def mla_attention(
     return_cache: bool = False,
     use_kernel: str = "auto",
     is_global: bool = True,
+    ctx=None,
 ) -> Tuple[jax.Array, Optional[Dict[str, jax.Array]]]:
     m = cfg.mla
     b, s, _ = x.shape
@@ -258,8 +284,8 @@ def mla_attention(
 
     q_pos = positions[0] if positions.ndim == 3 else positions
     if cache is not None and cache_index is not None:
-        c_all = _cache_update(cache["c_kv"], c_kv, cache_index)
-        pe_all = _cache_update(cache["k_pe"], k_pe, cache_index)
+        c_all = _shard_kv(ctx, _cache_update(cache["c_kv"], c_kv, cache_index))
+        pe_all = _shard_kv(ctx, _cache_update(cache["k_pe"], k_pe, cache_index))
         if return_cache:
             new_cache = {"c_kv": c_all, "k_pe": pe_all}
         else:
@@ -272,7 +298,8 @@ def mla_attention(
         kv_pos = jnp.where(kv_pos < valid_upto, kv_pos, jnp.int32(2**30))
         c_kv_use, k_pe_use = c_all, pe_all
     else:
-        new_cache = {"c_kv": c_kv, "k_pe": k_pe} if return_cache else None
+        new_cache = ({"c_kv": _shard_kv(ctx, c_kv),
+                      "k_pe": _shard_kv(ctx, k_pe)} if return_cache else None)
         skv = s
         kv_pos = q_pos
         c_kv_use, k_pe_use = c_kv, k_pe

@@ -43,6 +43,23 @@ class RunCtx:
             return 1
         return int(self.mesh.shape[self.model_axis])
 
+    @property
+    def seq_size(self) -> int:
+        """Devices along the seq axis (1 when the mesh exposes none)."""
+        if self.mesh is None or self.seq_axis is None:
+            return 1
+        return int(dict(self.mesh.shape).get(self.seq_axis, 1))
+
+    def seq_spec(self, seqlen: int) -> Optional[str]:
+        """Seq-axis name if the mesh divides ``seqlen``, else None.
+
+        The divisibility guard mirrors :mod:`repro.dist.sharding`: an
+        indivisible (or unit) sequence dim is replicated, so decode steps
+        (S=1) and smoke meshes share the sharded code path.
+        """
+        s = self.seq_size
+        return self.seq_axis if s > 1 and seqlen % s == 0 else None
+
     def shard_act(self, x: jax.Array, *spec) -> jax.Array:
         if self.mesh is None:
             return x
@@ -83,15 +100,12 @@ def block_apply(
         cache_index=cache_index,
         return_cache=return_cache,
         use_kernel=ctx.use_kernel,
+        ctx=ctx,
     )
 
     if kind.mixer in ("attn", "attn_local"):
         h = rms_norm(x, p["ln_attn"], eps, gemma=gm)
-        if cfg.mla is not None:
-            fn = mla_attention
-        else:
-            fn = gqa_attention
-            attn_kw["ctx"] = ctx
+        fn = mla_attention if cfg.mla is not None else gqa_attention
         a, c = fn(p["attn"], h, cfg, positions,
                   is_global=(kind.mixer == "attn"), **attn_kw)
         if gm and "ln_post_attn" in p:
@@ -133,7 +147,10 @@ def block_apply(
             batch_axes=ctx.batch_axes, model_axis=ctx.model_axis,
             capacity_factor=ctx.capacity_factor,
         )
-    x = ctx.shard_act(x, ctx.batch_axes, None, None)
+    # residual boundary: batch over the data axes and, for multi-token
+    # passes on a seq-bearing mesh, sequence over the seq axis (long-context
+    # prefill work is then partitioned like its KV cache)
+    x = ctx.shard_act(x, ctx.batch_axes, ctx.seq_spec(x.shape[1]), None)
     return x, new_cache
 
 
@@ -260,7 +277,7 @@ def forward(
 ) -> jax.Array:
     """Full-sequence forward -> logits [B, S, V]."""
     x = embed_in(cfg, params, batch)
-    x = ctx.shard_act(x, ctx.batch_axes, None, None)
+    x = ctx.shard_act(x, ctx.batch_axes, ctx.seq_spec(x.shape[1]), None)
     positions = batch.get("positions")
     if positions is None:
         b, s = x.shape[:2]
@@ -343,7 +360,7 @@ def prefill(
     engine pads/relocates it into its ring buffers.
     """
     x = embed_in(cfg, params, batch)
-    x = ctx.shard_act(x, ctx.batch_axes, None, None)
+    x = ctx.shard_act(x, ctx.batch_axes, ctx.seq_spec(x.shape[1]), None)
     positions = batch.get("positions")
     if positions is None:
         b, s = x.shape[:2]

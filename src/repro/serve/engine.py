@@ -86,6 +86,10 @@ class RealBackend:
             KVStore(cfg, n_slots, max_len, mesh=getattr(ctx, "mesh", None))
             for _ in range(n_pods)
         ]
+        # seq shards per pod mesh: the engine re-prices actual-byte state
+        # moves with this, so a seq-sharded migration charges 1/seq_shards
+        # of the bytes per hop
+        self.seq_shards = self.stores[0].seq_shards
         self._jnp = jnp
 
         def step(params, caches, tokens, pos):
@@ -195,8 +199,10 @@ class MultiPodEngine:
                     if shipped > dec.wire_bytes:
                         # the real cache column outweighed the router's
                         # estimate: re-price the state move with actual bytes
+                        # (seq-sharded columns move in parallel shard hops)
                         repriced = price_session_dispatch(
-                            0.0, 0.0, shipped, handoff_bytes=0.0)
+                            0.0, 0.0, shipped, handoff_bytes=0.0,
+                            seq_shards=getattr(self.backend, "seq_shards", 1))
                         dec = dataclasses.replace(
                             dec, wire_bytes=shipped,
                             wire_s=repriced.migrate_state_s)

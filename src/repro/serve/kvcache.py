@@ -26,6 +26,25 @@ class Session:
     last_token: int = 0
 
 
+def _map_with_bdim(fn, tree: Dict[str, Any], *rest: Dict[str, Any]):
+    """``jax.tree.map`` over decoder cache trees with the batch dim explicit.
+
+    Unrolled ``prefix``/``suffix`` entries put batch at dim 0; the scanned
+    ``body`` entries carry a leading ``n_groups`` axis, so batch is dim 1
+    there.  Passing the dim structurally (instead of sniffing shapes)
+    matches ``repro.dist.sharding.cache_pspecs`` and stays correct when a
+    body cache's ``n_groups`` equals the slot count.
+    """
+    def sub(key: str, bdim: int):
+        entries = [t[key] for t in (tree, *rest)]
+        if entries[0] is None:
+            return None
+        return jax.tree.map(lambda *ls: fn(bdim, *ls), *entries)
+
+    return {"prefix": sub("prefix", 0), "body": sub("body", 1),
+            "suffix": sub("suffix", 0)}
+
+
 class KVStore:
     def __init__(self, cfg: ModelConfig, n_slots: int, max_len: int,
                  dtype=jnp.bfloat16, *, mesh=None) -> None:
@@ -33,15 +52,49 @@ class KVStore:
         self.n_slots = n_slots
         self.max_len = max_len
         self.mesh = mesh
+        self._shardings = None
+        self._pspecs = None
         self.caches = decoder.init_cache(cfg, n_slots, max_len, dtype)
         if mesh is not None:
             # place the slot-ring trees per the ownership ledger, so imported
             # sessions land pre-sharded on this pod's mesh
-            from repro.dist.sharding import cache_shardings
-            self.caches = jax.device_put(
-                self.caches, cache_shardings(cfg, mesh, self.caches, n_slots))
+            from repro.dist.sharding import cache_pspecs, cache_shardings
+            self._pspecs = cache_pspecs(cfg, mesh, self.caches, n_slots)
+            self._shardings = cache_shardings(cfg, mesh, self.caches, n_slots)
+            self.caches = jax.device_put(self.caches, self._shardings)
         self.free_slots: List[int] = list(range(n_slots))[::-1]
         self.sessions: Dict[int, Session] = {}
+
+    @property
+    def seq_shards(self) -> float:
+        """Effective parallel-hop divisor for a migrated column's bytes.
+
+        Byte-weighted over the leaves the ledger actually seq-shards: a
+        leaf carrying the seq axis ships as ``seq``-many parallel chunks,
+        anything without a seq dim (the mamba conv/ssm state) ships whole.
+        A pure-attention cache on an 8-way seq mesh reports 8.0; a pure
+        mamba cache reports 1.0 regardless of the mesh; hybrids land in
+        between.  This is the ``seq_shards`` the locality pricing divides
+        the state bytes by, so it must track the real layout, not just the
+        mesh shape.
+        """
+        if self._pspecs is None:
+            return 1
+        from jax.sharding import PartitionSpec as P
+
+        from repro.dist.sharding import SEQ_AXIS, MeshAxes
+        ssize = MeshAxes.for_mesh(self.mesh).seq_size(self.mesh)
+        if ssize <= 1:
+            return 1
+        total = hop = 0.0
+        specs = jax.tree.leaves(self._pspecs,
+                                is_leaf=lambda s: isinstance(s, P))
+        for leaf, spec in zip(jax.tree.leaves(self.caches), specs):
+            b = leaf.nbytes / self.n_slots
+            total += b
+            split = any(a == SEQ_AXIS for a in spec)
+            hop += b / (ssize if split else 1.0)
+        return total / hop if hop > 0 else 1
 
     # -- session lifecycle -------------------------------------------------
     def alloc(self, sid: int) -> Session:
@@ -63,22 +116,23 @@ class KVStore:
 
     # -- cross-pod state migration ------------------------------------------
     def export_session(self, sid: int) -> Dict[str, Any]:
-        """Slice one session's cache column out (the bytes a lease move ships)."""
+        """Slice one session's cache column out (the bytes a lease move ships).
+
+        With a seq-bearing mesh the exported column stays seq-sharded: each
+        shard's chunk is a separate wire transfer, which is exactly the
+        ``1/seq_shards``-bytes-per-hop state move the router prices.
+        """
         s = self.sessions[sid]
 
-        def slice_slot(leaf):
-            if leaf is None:
-                return None
-            # batch dim is axis 0 for prefix/suffix caches, axis 1 for
-            # group-stacked body caches
-            ax = 1 if leaf.ndim >= 4 and leaf.shape[0] != self.n_slots else 0
-            return jnp.take(leaf, jnp.asarray([s.slot]), axis=ax)
+        def slice_slot(bdim, leaf):
+            return jnp.take(leaf, jnp.asarray([s.slot]), axis=bdim)
 
         return {
             "sid": sid,
             "length": s.length,
             "last_token": s.last_token,
-            "tree": jax.tree.map(slice_slot, self.caches),
+            "seq_shards": self.seq_shards,
+            "tree": _map_with_bdim(slice_slot, self.caches),
         }
 
     def import_session(self, blob: Dict[str, Any]) -> Session:
@@ -86,17 +140,19 @@ class KVStore:
         s.length = blob["length"]
         s.last_token = blob["last_token"]
 
-        def put(dst, src):
-            if src is None:
-                return dst
-            ax = 1 if dst.ndim >= 4 and dst.shape[0] != self.n_slots else 0
+        def put(bdim, dst, src):
             idx = [slice(None)] * dst.ndim
-            idx[ax] = s.slot
+            idx[bdim] = s.slot
             src_idx = [slice(None)] * dst.ndim
-            src_idx[ax] = 0
+            src_idx[bdim] = 0
             return dst.at[tuple(idx)].set(src[tuple(src_idx)].astype(dst.dtype))
 
-        self.caches = jax.tree.map(put, self.caches, blob["tree"])
+        self.caches = _map_with_bdim(put, self.caches, blob["tree"])
+        if self._shardings is not None:
+            # re-place the updated trees on this pod's mesh: an imported
+            # long-context column lands seq-sharded instead of wherever the
+            # eager scatter above materialized it
+            self.caches = jax.device_put(self.caches, self._shardings)
         return s
 
     def nbytes_session(self) -> float:

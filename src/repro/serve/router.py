@@ -85,6 +85,7 @@ class LocalityRouter:
         request_bytes: float = 4096.0,
         response_bytes: float = 1024.0,
         freq_tau_ms: float = ROUTER_DEFAULTS.freq_tau_ms,
+        seq_shards: float = 1,
     ) -> None:
         if arbitration not in ARBITRATIONS:
             raise ValueError(f"unknown arbitration {arbitration!r}")
@@ -99,6 +100,11 @@ class LocalityRouter:
         self.kv_bytes_per_token = kv_bytes_per_token
         self.request_bytes = request_bytes
         self.response_bytes = response_bytes
+        # seq-sharded KV layout: a state move leaves as this many parallel
+        # shard-to-shard hops (fractional for partially-sharded hybrid
+        # caches), shifting the forward-vs-acquire crossover toward
+        # acquisition for long-context sessions
+        self.seq_shards = max(1.0, float(seq_shards))
         self.metrics = RouterMetrics()
         self._now = 0.0              # router clock, ms (advanced by tick())
 
@@ -132,7 +138,7 @@ class LocalityRouter:
         # request/response sizes are already bytes, not tokens
         costs = price_session_dispatch(
             self.request_bytes, self.response_bytes, kv_bytes,
-            wire_bytes_per_token=1.0)
+            wire_bytes_per_token=1.0, seq_shards=self.seq_shards)
 
         if owner < 0:
             # new session: place at the DTD's choice (long-term policy may

@@ -109,6 +109,42 @@ def test_overload_control_avoids_hot_node():
     assert thr[True] > 1.5 * thr[False]
 
 
+def test_forward_in_flight_to_failed_node_restarts_thread():
+    """Fail the target while a forwarded txn is on the wire: the p2p is
+    dropped (fail-stop), and the originating thread must be restarted by the
+    view change — it used to wedge forever because ``exec_node`` was only
+    recorded when the *target* ran ``_certify``."""
+    c = _bank("LILAC-TM-ST", locality=0.3, duration=600.0)
+    orig_send = c.gcs.p2p_send
+    hit = {}
+
+    def send_and_fail(sender, dest, msg):
+        orig_send(sender, dest, msg)
+        if not hit and isinstance(msg, tuple) and msg[0] == "forward" \
+                and c.events.now > 100.0:
+            txn = msg[1]
+            assert txn.exec_node == dest      # target recorded at send time
+            hit.update(origin=txn.origin, txid=txn.txid, dest=dest)
+            c.gcs.fail(dest)                  # dies with the forward in flight
+
+    c.gcs.p2p_send = send_and_fail
+    m = c.run()
+    assert hit, "no forward happened — weaken the trigger"
+    # the in-flight transaction was restarted, not wedged: it left _inflight,
+    # and no *survivor's* txn still points at the dead node (the dead node's
+    # own in-flight txns died with it — that's fail-stop, not a wedge)
+    assert hit["txid"] not in c._inflight
+    assert all(t.exec_node != hit["dest"] for t in c._inflight.values()
+               if t.origin != hit["dest"])
+    t_fail = [t for (t, n) in m.commit_times if n == hit["origin"]]
+    assert any(t > 450.0 for t in t_fail), "originating thread wedged"
+    # the dead node never executed the dropped forward: survivors converge
+    expect = c.cfg.n_items * c.cfg.init_value
+    for r in c.replicas:
+        if r.node != hit["dest"]:
+            assert r.store.total() == pytest.approx(expect, abs=1e-6)
+
+
 def test_tpcc_runs_and_fgl_helps():
     lay = TpccLayout(n_nodes=4)
     ccmap = TpccConflictMap(lay)

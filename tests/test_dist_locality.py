@@ -54,6 +54,33 @@ def test_session_wire_bytes_tracks_chosen_plan():
     assert not c2.prefer_migration and c2.wire_bytes == c2.state_bytes
 
 
+def test_session_seq_shards_cuts_per_hop_state_time():
+    """A seq-sharded column moves as parallel shard hops: the state plan's
+    serialization shrinks by 1/seq_shards while total wire bytes stay put."""
+    whole = price_session_dispatch(4096, 1024, kv_state_bytes=64_000_000,
+                                   handoff_bytes=0.0)
+    split = price_session_dispatch(4096, 1024, kv_state_bytes=64_000_000,
+                                   handoff_bytes=0.0, seq_shards=16)
+    assert split.state_bytes == whole.state_bytes          # total unchanged
+    assert split.state_hop_bytes == pytest.approx(whole.state_bytes / 16)
+    assert split.migrate_state_s < whole.migrate_state_s
+    # work plan is untouched by the state layout
+    assert split.migrate_work_s == whole.migrate_work_s
+
+
+def test_session_seq_shards_can_flip_the_verdict():
+    """Near the crossover, the cheaper per-hop state move flips the verdict
+    from forward-the-work to acquire-the-state."""
+    kv = price_session_dispatch(4096, 1024, kv_state_bytes=0.0,
+                                handoff_bytes=0.0).work_bytes * 4
+    whole = price_session_dispatch(4096, 1024, kv_state_bytes=kv,
+                                   handoff_bytes=0.0)
+    split = price_session_dispatch(4096, 1024, kv_state_bytes=kv,
+                                   handoff_bytes=0.0, seq_shards=8)
+    assert whole.prefer_migration             # 4x the work bytes: forward
+    assert not split.prefer_migration         # /8 per hop: acquire wins
+
+
 def test_moe_dispatch_flips_with_ep_degree():
     """Wide EP favors token a2a; a single device needs no wire at all."""
     kw = dict(tokens_per_device=4096, d_model=4096, top_k=2,

@@ -122,6 +122,83 @@ def test_batch_pspecs_cover_train_and_decode_inputs():
     assert ps["positions"][0] is None
 
 
+class _Key:
+    def __init__(self, k):
+        self.key = k
+
+
+def _leaf_spec(names, shape, bdim, ssize, msize=1):
+    path = tuple(_Key(n) for n in names)
+    leaf = jax.ShapeDtypeStruct(tuple(shape), jnp.float32)
+    return shd._cache_leaf_spec(path, leaf, bdim, ("data",), "model", msize,
+                                "seq", ssize)
+
+
+def test_mesh_axes_seq_split():
+    """A ``seq`` axis is recognized and kept out of the batch axes."""
+    devs = np.array(jax.devices()).reshape(1, jax.device_count(), 1)
+    mesh = Mesh(devs, ("data", "seq", "model"))
+    ax = shd.MeshAxes.for_mesh(mesh)
+    assert ax.batch == ("data",) and ax.seq == "seq"
+    assert ax.seq_size(mesh) == jax.device_count()
+    # a seq-less mesh reports seq_size 1
+    m2 = cpu_mesh()
+    ax2 = shd.MeshAxes.for_mesh(m2)
+    assert ax2.seq is None and ax2.seq_size(m2) == 1
+
+
+def test_seq_rule_shards_attention_seq_dims():
+    """GQA k/v and MLA c_kv/k_pe shard their seq dim over the seq axis —
+    in both unrolled (bdim 0) and group-stacked (bdim 1) layouts — while
+    the mamba conv/ssm state and indivisible lengths stay whole."""
+    # GQA prefix [B, S, n_kv, hd] and body [G, B, S, n_kv, hd]
+    s = _leaf_spec(("attn", "k"), (4, 32, 2, 16), 0, ssize=4)
+    assert s[1] == "seq"
+    s = _leaf_spec(("attn", "v"), (2, 4, 32, 2, 16), 1, ssize=4)
+    assert s[2] == "seq"
+    # MLA latent caches [B, S, r]
+    s = _leaf_spec(("attn", "c_kv"), (4, 32, 24), 0, ssize=4)
+    assert s[1] == "seq"
+    s = _leaf_spec(("attn", "k_pe"), (2, 4, 32, 8), 1, ssize=4)
+    assert s[2] == "seq"
+    # indivisible seq length: replicated, not rejected
+    s = _leaf_spec(("attn", "k"), (4, 30, 2, 16), 0, ssize=4)
+    assert s[1] is None
+    # seq axis of size 1 (smoke mesh): no seq sharding
+    s = _leaf_spec(("attn", "k"), (4, 32, 2, 16), 0, ssize=1)
+    assert s[1] is None
+    # mamba state has no seq dim to shard
+    s = _leaf_spec(("mamba", "conv"), (4, 3, 96), 0, ssize=3)
+    assert all(a is None or a == ("data",) for a in s)
+    s = _leaf_spec(("mamba", "ssm"), (4, 8, 16, 16), 0, ssize=4)
+    assert s[1] is None
+
+
+def test_seq_rule_composes_with_kv_head_sharding():
+    """On a seq+model mesh a GQA cache shards seq AND kv heads at once."""
+    s = _leaf_spec(("attn", "k"), (4, 32, 4, 16), 0, ssize=4, msize=2)
+    assert s[1] == "seq" and s[2] == "model"
+
+
+@pytest.mark.parametrize("arch", ["glm4-9b", "deepseek-v2-236b"])
+def test_cache_pspecs_congruent_on_seq_mesh(arch):
+    """cache_pspecs stays congruent with init_cache on a seq-bearing mesh
+    (1-device host: the seq axis is size 1, so everything replicates but
+    the tree structure and the zip must hold)."""
+    cfg = dataclasses.replace(get_smoke_config(arch), dtype="float32")
+    devs = np.array(jax.devices()).reshape(jax.device_count(), 1, 1)
+    mesh = Mesh(devs, ("data", "seq", "model"))
+    tree = jax.eval_shape(lambda: decoder.init_cache(cfg, 4, 32, jnp.float32))
+    specs = shd.cache_pspecs(cfg, mesh, tree, 4)
+    assert jax.tree.structure(tree) == jax.tree.structure(
+        specs, is_leaf=lambda x: isinstance(x, P))
+    structs = jax.tree.map(
+        lambda s, p: jax.ShapeDtypeStruct(
+            s.shape, s.dtype, sharding=NamedSharding(mesh, p)),
+        tree, specs)
+    assert jax.tree.structure(structs) == jax.tree.structure(tree)
+
+
 def test_indivisible_dims_fall_back_to_replication():
     """A model-axis size that divides nothing must yield pure replication."""
     cfg = dataclasses.replace(

@@ -1,0 +1,49 @@
+"""Unit tests of the DTD input statistics (:mod:`repro.core.stats`)."""
+import math
+
+import pytest
+
+from repro.core.stats import CpuMeter, DecayedFrequency
+
+
+def test_cpu_meter_steady_state_tracks_busy_fraction():
+    """With one of two slots held, utilization converges to 0.5."""
+    m = CpuMeter(n_slots=2, tau_ms=10.0)
+    m.acquire(0.0)
+    assert m.utilization(50 * m.tau) == pytest.approx(0.5, abs=1e-3)
+
+
+def test_cpu_meter_counts_extra_load_once():
+    """Fig-3c regression: injected load must raise utilization by exactly
+    ``extra_load``, not 2x it — the old code folded it into the EWMA target
+    *and* re-added it in ``utilization()``, so the constraint-(3) valve read
+    ~2x the injection and tripped at ~half the configured max_cpu."""
+    m = CpuMeter(n_slots=2, tau_ms=10.0)
+    m.acquire(0.0)                      # busy fraction 0.5
+    m.extra_load = 0.2                  # inject background jobs
+    u = m.utilization(50 * m.tau)       # many tau: EWMA fully converged
+    assert u == pytest.approx(0.7, abs=1e-3)   # 0.5 + 0.2, NOT 0.9
+
+
+def test_cpu_meter_extra_load_saturates_at_one():
+    m = CpuMeter(n_slots=1, tau_ms=5.0)
+    m.acquire(0.0)
+    m.extra_load = 0.95
+    assert m.utilization(100 * m.tau) == pytest.approx(1.0)
+
+
+def test_cpu_meter_release_decays_back():
+    m = CpuMeter(n_slots=1, tau_ms=10.0)
+    m.acquire(0.0)
+    m.release(20 * m.tau)
+    assert m.utilization(40 * m.tau) < 0.2
+
+
+def test_decayed_frequency_rate_and_decay():
+    f = DecayedFrequency(n_nodes=2, n_classes=1, tau_ms=100.0)
+    for _ in range(10):
+        f.record(0.0, 0, (0,))
+    hot = f.rates(0.0)[0, 0]
+    assert hot == pytest.approx(10 / 100.0)
+    cold = f.rates(10 * f.tau)[0, 0]
+    assert cold < 1e-3 * hot
