@@ -1,0 +1,158 @@
+"""Certification throughput sweep: batch × read-set length × backend.
+
+Measures the commit-phase hot loop the batched pipeline replaces — for
+each (batch size, read-set length) cell, certify the same transaction
+batch with
+
+* ``loop``   — the pre-refactor per-transaction path, reproduced verbatim:
+  ``ReadSetEntry`` records walked one at a time with python/numpy-scalar
+  compares, exactly what ``cluster._validate_and_commit`` ran before the
+  batched drain existed;
+* ``jnp``    — ``validate_batch``: compact read-log buffers packed into
+  power-of-two buckets + one jit'd gather/compare dispatch (cells run
+  lock-free, the common case — write packing only engages when locks are
+  passed; tests/test_certify.py covers the locked path);
+* ``pallas`` — the same packed arrays through the Pallas kernel
+  (``interpret=True`` off-TPU, so off-TPU numbers are correctness smoke,
+  not perf).
+
+Timings include packing — the batched number is the end-to-end cost of a
+drain, not just the kernel.  Writes a ``BENCH_certify.json`` trajectory
+artifact (CI uploads it; ``results/BENCH_certify.json`` tracks it in-repo)
+and, with ``--check``, enforces the pipeline's acceptance floor: the jnp
+backend reaches >= 5x ``loop`` throughput in the batch >= 64 regime
+(small batches can't amortize the dispatch; the grid shows each cell).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core.stm import Transaction, VersionedStore, validate_batch
+
+
+def make_batch(n_items: int, batch: int, read_len: int, write_len: int,
+               seed: int = 0):
+    """A store plus ``batch`` transactions with mostly-valid read sets.
+
+    Returns ``(store, txns, recs)``: ``txns`` carry the pipeline's compact
+    read logs, ``recs`` the same reads as the legacy ``ReadSetEntry``
+    record lists the old loop walked.
+    """
+    rng = np.random.default_rng(seed)
+    store = VersionedStore(n_items)
+    store.versions[:] = rng.integers(0, 50, n_items)
+    txns, recs = [], []
+    for i in range(batch):
+        t = Transaction(txid=i + 1, origin=0)
+        stale = rng.integers(read_len) if rng.random() < 0.02 else -1
+        for j, it in enumerate(rng.integers(0, n_items, read_len)):
+            ver = int(store.versions[it])
+            if j == stale:                   # ~2% stale txns -> aborts
+                ver -= 1
+            t.log_read(int(it), ver)
+        for it in rng.integers(0, n_items, write_len):
+            t.write_set[int(it)] = float(i)
+        txns.append(t)
+        recs.append(t.read_set)              # materialized record view
+    return store, txns, recs
+
+
+def legacy_validate(versions: np.ndarray, recs) -> bool:
+    """The seed's one-at-a-time TL2 check (pre-batching ``validate``)."""
+    for e in recs:
+        if int(versions[e.item]) != e.version:
+            return False
+    return True
+
+
+def bench_cell(store, txns, recs, backend: str, *, iters: int,
+               locks: np.ndarray) -> Dict:
+    """Certify the batch ``iters`` times; returns txns/s and the verdicts."""
+    if backend == "loop":
+        def run():
+            versions = store.versions
+            return [legacy_validate(versions, rs) for rs in recs]
+    else:
+        def run():
+            return validate_batch(store, txns, locks=locks, backend=backend)
+    ref = np.asarray(run())                  # warm the jit caches
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = run()
+    dt = time.perf_counter() - t0
+    assert np.array_equal(np.asarray(out), ref)
+    return {"txns_per_s": len(txns) * iters / dt,
+            "abort_rate": 1.0 - float(ref.mean())}
+
+
+def main(argv=None) -> Dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--batches", nargs="*", type=int,
+                    default=[16, 64, 256, 1024])
+    ap.add_argument("--read-lens", nargs="*", type=int,
+                    default=[16, 64, 256])
+    ap.add_argument("--backends", nargs="*",
+                    default=["loop", "jnp", "pallas"])
+    ap.add_argument("--n-items", type=int, default=4096)
+    ap.add_argument("--iters", type=int, default=30)
+    ap.add_argument("--out", default="BENCH_certify.json")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny grid for CI: batches 64/1024, read len 256")
+    ap.add_argument("--check", action="store_true",
+                    help="fail unless jnp >= 5x loop at batch >= 64")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        args.batches, args.read_lens = [64, 1024], [256]
+        args.iters = 10
+
+    rows: List[Dict] = []
+    print("backend,batch,read_len,txns_per_s,abort_rate,speedup_vs_loop")
+    for batch in args.batches:
+        for r in args.read_lens:
+            store, txns, recs = make_batch(args.n_items, batch, r,
+                                           max(1, r // 4))
+            locks = None                     # lock-free cells (common case)
+            base = None
+            for backend in args.backends:
+                cell = bench_cell(store, txns, recs, backend,
+                                  iters=args.iters, locks=locks)
+                if backend == "loop":
+                    base = cell["txns_per_s"]
+                speedup = cell["txns_per_s"] / base if base else float("nan")
+                rows.append({"backend": backend, "batch": batch,
+                             "read_len": r, **cell, "speedup_vs_loop": speedup})
+                print(f"{backend},{batch},{r},{cell['txns_per_s']:.0f},"
+                      f"{cell['abort_rate']:.3f},{speedup:.2f}", flush=True)
+
+    out = {
+        "bench": "certify",
+        "n_items": args.n_items,
+        "iters": args.iters,
+        "rows": rows,
+    }
+    checked = [x for x in rows
+               if x["backend"] == "jnp" and x["batch"] >= 64]
+    if checked:
+        best = max(checked, key=lambda x: x["speedup_vs_loop"])
+        out["best_jnp_speedup_batch_ge_64"] = best["speedup_vs_loop"]
+        out["best_jnp_cell"] = {"batch": best["batch"],
+                                "read_len": best["read_len"]}
+        print(f"best jnp speedup at batch>=64: "
+              f"{best['speedup_vs_loop']:.2f}x "
+              f"(batch={best['batch']}, read_len={best['read_len']})")
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"wrote {args.out}")
+    if args.check:
+        assert checked and out["best_jnp_speedup_batch_ge_64"] >= 5.0, \
+            f"jnp speedup below 5x: {out.get('best_jnp_speedup_batch_ge_64')}"
+    return out
+
+
+if __name__ == "__main__":
+    main()

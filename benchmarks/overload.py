@@ -14,11 +14,14 @@ from repro.core import BankWorkload, Cluster, SimConfig
 
 def run_variant(policy: str, ctrl: bool, *, duration: float = 1200.0,
                 inject_ms: float = 300.0, threads: int = 2,
-                slowdown: float = 50.0, seed: int = 0) -> Dict:
+                slowdown: float = 50.0, seed: int = 0,
+                max_cpu: float | None = None) -> Dict:
     cfg = SimConfig(duration_ms=duration, warmup_ms=100.0, n_classes=16,
                     threads_per_node=threads, seed=seed)
-    cfg = replace(cfg, dtd=replace(cfg.dtd, policy=policy,
-                                   enable_overload_ctrl=ctrl))
+    dtd = replace(cfg.dtd, policy=policy, enable_overload_ctrl=ctrl)
+    if max_cpu is not None:
+        dtd = replace(dtd, max_cpu=max_cpu)
+    cfg = replace(cfg, dtd=dtd)
     wl = BankWorkload(n_nodes=cfg.n_nodes, n_items=cfg.n_items, locality=1.0,
                       hot_partition=0, hot_fraction=0.2)
     c = Cluster(cfg, wl)
@@ -36,11 +39,51 @@ def run_variant(policy: str, ctrl: bool, *, duration: float = 1200.0,
     }
 
 
+def sweep_max_cpu(values: List[float], *, duration: float = 1200.0,
+                  threads: int = 2, seeds: int = 3) -> List[Dict]:
+    """Re-sweep the constraint-(3) threshold against the fixed CpuMeter.
+
+    The PR-3 ``CpuMeter`` fix means utilization now reads the true injected
+    load (the valve used to trip at ~half the configured ``max_cpu``), so
+    thresholds tuned against the old meter are stale.  Post-overload
+    throughput, seed-averaged, per policy × max_cpu; the winner by combined
+    post-overload throughput is what ``DTDConfig.max_cpu`` /
+    ``ROUTER_DEFAULTS.max_cpu`` pin.
+    """
+    rows = []
+    print("policy,max_cpu,pre_overload_txn_s,post_overload_txn_s")
+    for policy in ("short", "long"):
+        for v in values:
+            pre = post = 0.0
+            for s in range(seeds):
+                r = run_variant(policy, True, duration=duration,
+                                threads=threads, seed=s, max_cpu=v)
+                pre += r["pre"] / seeds
+                post += r["post"] / seeds
+            rows.append({"policy": policy, "max_cpu": v,
+                         "pre": pre, "post": post})
+            print(f"{policy},{v},{pre:.1f},{post:.1f}", flush=True)
+    by_v = {v: sum(r["post"] for r in rows if r["max_cpu"] == v)
+            for v in values}
+    best = max(by_v, key=by_v.get)
+    print(f"winner: max_cpu={best} "
+          f"(combined post-overload {by_v[best]:.1f} txn/s)")
+    return rows
+
+
 def main(argv=None) -> List[Dict]:
     ap = argparse.ArgumentParser()
     ap.add_argument("--duration", type=float, default=1200.0)
     ap.add_argument("--threads", type=int, default=2)
+    ap.add_argument("--seeds", type=int, default=3)
+    ap.add_argument("--sweep-max-cpu", nargs="*", type=float, default=None,
+                    help="sweep constraint-(3) thresholds instead of the "
+                         "Fig-3c time-series run")
     args = ap.parse_args(argv)
+    if args.sweep_max_cpu is not None:
+        values = args.sweep_max_cpu or [0.5, 0.6, 0.7, 0.8, 0.85, 0.9, 0.95]
+        return sweep_max_cpu(values, duration=args.duration,
+                             threads=args.threads, seeds=args.seeds)
 
     rows = []
     print("variant,t_ms,throughput_txn_s")

@@ -41,7 +41,7 @@ from .forwarder import CommitNotice, ForwardPolicy, ForwardRequest
 from .gcs import GCSLatency, SimGCS
 from .lease import ALCLeaseManager, FGLLeaseManager, LeaseRequest, LOR
 from .stats import CpuMeter, DecayedFrequency
-from .stm import Transaction, VersionedStore
+from .stm import Transaction, VersionedStore, validate_batch
 
 
 # --------------------------------------------------------------------------
@@ -103,6 +103,26 @@ class SimConfig:
     forward: ForwardPolicy = field(default_factory=ForwardPolicy)
     seed: int = 0
     init_value: float = 1000.0
+    # "batched": enabled transactions whose commit-phase slots fire within
+    # the same drain window are certified in ONE vectorized validate_batch
+    # call (the default pipeline); "sequential" is the per-transaction python
+    # loop, retained as the equivalence-test oracle.
+    certify_mode: str = "batched"
+    # Coalescing window for the certification drain.  0.0 (default) drains at
+    # the same simulated instant the commit-phase slots fire — bit-identical
+    # to the sequential path.  > 0 defers the verdict by up to this much to
+    # grow batches (leases are held across the window, so safety is
+    # unchanged; commit latency takes the hit) — the knob that lets the
+    # simulator run node/thread counts an order of magnitude past the
+    # paper's 4-node cluster without the python certification loop
+    # dominating wall-clock.
+    certify_window_ms: float = 0.0
+    # Batches below this size settle verdicts with the numpy loop (JAX
+    # dispatch overhead would swamp a near-empty batch); at or above it the
+    # packed arrays go through kernels.ops (Pallas on TPU, jit'd jnp
+    # elsewhere).  The two agree bitwise — tests force this to 1 to pin the
+    # vectorized path against the sequential oracle.
+    certify_jax_min: int = 8
 
 
 @dataclass
@@ -115,6 +135,8 @@ class Metrics:
     lease_requests: int = 0
     piggybacks: int = 0
     rw_certified: int = 0
+    cert_batches: int = 0          # batched validate_batch drains issued
+    cert_batch_txns: int = 0       # transactions certified through them
     commit_times: List[Tuple[float, int]] = field(default_factory=list)
     commit_latency_sum: float = 0.0
 
@@ -147,6 +169,10 @@ class Replica:
         self.slowdown = 1.0  # CPU-contention multiplier on processing times
         self.waiters: List[Tuple["SimTxn", List[LOR]]] = []
         self.pending_reqs: Dict[int, "SimTxn"] = {}
+        # batched certification: commit-phase slots that fired but whose
+        # verdict is settled by the next drain event (same instant)
+        self.certify_queue: List["SimTxn"] = []
+        self.certify_pending = False
 
 
 @dataclass
@@ -187,6 +213,14 @@ class Cluster:
         self._reqid = itertools.count(1)
         self._stopped = False
         self._inflight: Dict[int, SimTxn] = {}
+        # item -> conflict class, used to derive per-item write-lock state
+        # from the lease layer for the certification kernel
+        if hasattr(self.ccmap, "of_item"):
+            self._item_cc = np.fromiter(
+                (self.ccmap.of_item(i) for i in range(cfg.n_items)),
+                np.int64, count=cfg.n_items)
+        else:
+            self._item_cc = None
         self.t_throughput: List[Tuple[float, int, int]] = []  # (t, node, 1)
         for i in range(cfg.n_nodes):
             self.gcs.on_opt[i] = self._make_handler(i, self._on_opt)
@@ -396,50 +430,158 @@ class Cluster:
             def start(t=txn, d=dur):
                 def fin():
                     self._release_slot(node)
-                    self._validate_and_commit(t, node)
+                    if self.cfg.certify_mode == "batched":
+                        self._enqueue_certify(t, node)
+                    else:
+                        self._validate_and_commit(t, node)
                 self.events.schedule(d, fin)
 
             self._request_slot(node, start)
 
+    # -- batched certification drain ------------------------------------------
+    def _enqueue_certify(self, txn: SimTxn, node: int) -> None:
+        """Queue a commit-phase-complete transaction for the batch drain.
+
+        All commit-phase slots armed by one ``_check_waiters`` call share the
+        same duration, so they land here at the same instant; the drain event
+        (scheduled at zero delay, i.e. after every same-instant fin) packs
+        them into one ``validate_batch`` dispatch.
+        """
+        r = self.replicas[node]
+        r.certify_queue.append(txn)
+        if not r.certify_pending:
+            r.certify_pending = True
+            self.events.schedule(
+                self.cfg.certify_window_ms, lambda: self._drain_certify(node))
+
+    def _write_locks(self, node: int) -> Optional[np.ndarray]:
+        """Per-item write-lock state from the lease layer's ownership view.
+
+        An item is write-locked at ``node`` when its conflict class is
+        currently leased to a *different* replica.  Enabled transactions head
+        every queue they touch, so a lock conflict here means the batch was
+        fed a transaction the lease layer never enabled — the kernel turns
+        that protocol violation into an abort instead of a silent pass.
+        """
+        if self._item_cc is None:
+            return None
+        lm = self.replicas[node].lm
+        owners = np.fromiter(
+            (lm.head_owner(cc) for cc in range(lm.n_classes)),
+            np.int64, count=lm.n_classes)
+        per_item = owners[self._item_cc]
+        return ((per_item >= 0) & (per_item != node)).astype(np.int32)
+
+    def _locked_write(self, txn: SimTxn, node: int) -> bool:
+        """Per-txn twin of the kernels' lock check (small-batch path)."""
+        if self._item_cc is None:
+            return False
+        lm = self.replicas[node].lm
+        for item in txn.stm.write_set:
+            owner = lm.head_owner(int(self._item_cc[item]))
+            if owner >= 0 and owner != node:
+                return True
+        return False
+
+    def _drain_certify(self, node: int) -> None:
+        r = self.replicas[node]
+        r.certify_pending = False
+        batch, r.certify_queue = r.certify_queue, []
+        if not batch:
+            return
+        if len(batch) >= self.cfg.certify_jax_min:
+            ok = validate_batch(
+                r.store, [t.stm for t in batch], locks=self._write_locks(node))
+        else:
+            # near-empty batch: JAX dispatch overhead would dominate — the
+            # numpy loop settles the same verdicts, including the lock
+            # check, so a protocol violation aborts regardless of how many
+            # transactions happened to share the drain instant
+            ok = [r.store.validate(t.stm) and not self._locked_write(t, node)
+                  for t in batch]
+        self.metrics.cert_batches += 1
+        self.metrics.cert_batch_txns += len(batch)
+        # Intra-batch serialization: the one-at-a-time path applies each
+        # commit before validating the next, so a transaction reading an item
+        # written by an earlier committer in the same batch must abort (the
+        # earlier commit stamped a fresh txid, which can never equal the
+        # snapshot version).  Writes are resolved by the single apply_batch.
+        written: set = set()
+        verdicts: List[bool] = []
+        committers: List[SimTxn] = []
+        for t, o in zip(batch, ok):
+            good = bool(o) and not any(
+                it in written for it in t.stm.read_items)
+            verdicts.append(good)
+            if good:
+                written.update(t.stm.write_set)
+                committers.append(t)
+        if committers:
+            r.store.apply_batch(
+                [t.stm.write_set for t in committers],
+                [t.txid for t in committers])
+        for t, good in zip(batch, verdicts):
+            if good:
+                self._commit_applied(t, node)
+            else:
+                self._certify_failed(t, node)
+
     def _validate_and_commit(self, txn: SimTxn, node: int) -> None:
+        """One-at-a-time certification — the batched drain's test oracle."""
         r = self.replicas[node]
         if r.store.validate(txn.stm):
             self._commit(txn, node)
         else:
-            self.metrics.aborts += 1
-            txn.reexecs += 1
-            if txn.reexecs > self.cfg.forward.max_reexec:
-                # give up: release leases, notify origin with an abort
-                self._finish_leases(txn, node)
-                if node != txn.origin:
-                    self.gcs.p2p_send(
-                        node,
-                        txn.origin,
-                        ("notice", CommitNotice(txn.txid, txn.origin, txn.thread, False)),
-                    )
-                else:
-                    self._txn_done(txn, committed=False)
-                return
-            # re-execute holding the leases (ALC re-execution rule): no other
-            # replica can have updated the leased classes, so the re-run is
-            # conflict-free provided the data-set is unchanged.
-            rng = self.rngs[node]
-            mean = txn.spec.exec_ms or self.cfg.exec_ms
-            dur = float(rng.exponential(mean) * 0.5 + mean * 0.5) * r.slowdown
-            def reexec():
-                self.events.schedule(dur, lambda: self._reexec_done(txn, node))
-            self._request_slot(node, reexec)
+            self._certify_failed(txn, node)
+
+    def _certify_failed(self, txn: SimTxn, node: int) -> None:
+        r = self.replicas[node]
+        self.metrics.aborts += 1
+        txn.reexecs += 1
+        if txn.reexecs > self.cfg.forward.max_reexec:
+            # give up: release leases, notify origin with an abort
+            self._finish_leases(txn, node)
+            if node != txn.origin:
+                self.gcs.p2p_send(
+                    node,
+                    txn.origin,
+                    ("notice", CommitNotice(txn.txid, txn.origin, txn.thread, False)),
+                )
+            else:
+                self._txn_done(txn, committed=False)
+            return
+        # re-execute holding the leases (ALC re-execution rule): no other
+        # replica can have updated the leased classes, so the re-run is
+        # conflict-free provided the data-set is unchanged.
+        rng = self.rngs[node]
+        mean = txn.spec.exec_ms or self.cfg.exec_ms
+        dur = float(rng.exponential(mean) * 0.5 + mean * 0.5) * r.slowdown
+        def reexec():
+            self.events.schedule(dur, lambda: self._reexec_done(txn, node))
+        self._request_slot(node, reexec)
 
     def _reexec_done(self, txn: SimTxn, node: int) -> None:
         r = self.replicas[node]
         txn.stm = Transaction(txid=txn.txid, origin=txn.origin)
         txn.result = txn.spec.execute(r.store, txn.stm)
         self._release_slot(node)
-        self._validate_and_commit(txn, node)
+        if self.cfg.certify_mode == "batched":
+            self._enqueue_certify(txn, node)
+        else:
+            self._validate_and_commit(txn, node)
 
     def _commit(self, txn: SimTxn, node: int) -> None:
         r = self.replicas[node]
         r.store.apply_versioned(txn.stm.write_set, txn.txid)
+        self._commit_applied(txn, node)
+
+    def _commit_applied(self, txn: SimTxn, node: int) -> None:
+        """Post-apply commit work: disseminate the write-set, free leases.
+
+        The batched drain applies all committers' write-sets in one
+        ``apply_batch`` scatter and then runs this per transaction in batch
+        order, so broadcast/free ordering matches the sequential path.
+        """
         self._ur_broadcast_from(
             node,
             (

@@ -15,11 +15,10 @@ remote/forwarded transactions at once — is vectorized in JAX
 """
 from __future__ import annotations
 
+import array
 from dataclasses import dataclass, field
 from typing import Dict, Iterable, List, Sequence, Tuple
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
 
@@ -29,13 +28,25 @@ class ReadSetEntry:
     version: int
 
 
+def _read_log() -> array.array:
+    return array.array("i")
+
+
 @dataclass
 class Transaction:
-    """A transaction's footprint, as captured by its first (local) execution."""
+    """A transaction's footprint, as captured by its first (local) execution.
+
+    The read log lives in one interleaved ``array.array`` int32 buffer
+    (item, version, item, version, ...) rather than a list of records:
+    appends are C-speed in the execution path, and the batched certification
+    pipeline packs a whole batch with a single ``bytes.join`` memcpy instead
+    of per-entry attribute walks (which would cost as much as the python
+    validation loop the batching replaces).
+    """
 
     txid: int
     origin: int
-    read_set: List[ReadSetEntry] = field(default_factory=list)
+    read_log: array.array = field(default_factory=_read_log)
     write_set: Dict[int, float] = field(default_factory=dict)
     read_only: bool = False
     # conflict classes, filled by the replication manager via getConflictClasses
@@ -43,6 +54,26 @@ class Transaction:
     # benchmark payload (e.g. bank partition id) used by OPT policies & stats
     tag: int = -1
     result: float = 0.0
+
+    def log_read(self, item: int, version: int) -> None:
+        self.read_log.append(item)
+        self.read_log.append(version)
+
+    @property
+    def n_reads(self) -> int:
+        return len(self.read_log) // 2
+
+    @property
+    def read_items(self) -> array.array:
+        """The logged items (a copy; hot paths use ``read_log`` directly)."""
+        return self.read_log[0::2]
+
+    @property
+    def read_set(self) -> List[ReadSetEntry]:
+        """Record view of the read log (compat / inspection path)."""
+        rl = self.read_log
+        return [ReadSetEntry(rl[k], rl[k + 1])
+                for k in range(0, len(rl), 2)]
 
 
 class VersionedStore:
@@ -56,7 +87,7 @@ class VersionedStore:
 
     # -- execution-side API -------------------------------------------------
     def read(self, txn: Transaction, item: int) -> float:
-        txn.read_set.append(ReadSetEntry(item, int(self.versions[item])))
+        txn.log_read(item, int(self.versions[item]))
         if item in txn.write_set:
             return txn.write_set[item]
         return float(self.values[item])
@@ -67,8 +98,10 @@ class VersionedStore:
     # -- certification ------------------------------------------------------
     def validate(self, txn: Transaction) -> bool:
         """TL2 read-set validation against the current store."""
-        for e in txn.read_set:
-            if int(self.versions[e.item]) != e.version:
+        versions = self.versions
+        rl = txn.read_log
+        for k in range(0, len(rl), 2):
+            if versions[rl[k]] != rl[k + 1]:
                 return False
         return True
 
@@ -94,6 +127,37 @@ class VersionedStore:
             self.versions[item] = version
         self.clock = max(self.clock, version)
 
+    def apply_batch(
+        self,
+        write_sets: Sequence[Dict[int, float]],
+        versions: Sequence[int],
+    ) -> None:
+        """Apply many validated write-sets in one vectorized scatter.
+
+        Equivalent to ``apply_versioned(ws, v)`` called in order — later
+        write-sets win on item overlap (last-writer-wins is resolved
+        explicitly, not left to fancy-indexing order), so the batched commit
+        phase produces byte-identical ``values``/``versions`` arrays to the
+        one-at-a-time path.
+        """
+        n = sum(len(ws) for ws in write_sets)
+        if n == 0:
+            return
+        items = np.fromiter(
+            (i for ws in write_sets for i in ws), np.int64, count=n)
+        vals = np.fromiter(
+            (v for ws in write_sets for v in ws.values()), np.float64, count=n)
+        vers = np.repeat(
+            np.asarray(list(versions), dtype=np.int64),
+            [len(ws) for ws in write_sets],
+        )
+        # keep only the last write per item, preserving batch order
+        _, first_in_rev = np.unique(items[::-1], return_index=True)
+        keep = n - 1 - first_in_rev
+        self.values[items[keep]] = vals[keep]
+        self.versions[items[keep]] = vers[keep]
+        self.clock = max(self.clock, int(vers.max()))
+
     def total(self) -> float:
         return float(self.values.sum())
 
@@ -102,63 +166,145 @@ class VersionedStore:
 # Vectorized (JAX) batched validation — the certification hot loop.
 # ----------------------------------------------------------------------------
 
-@jax.jit
-def _validate_batch_jit(
-    store_versions: jax.Array,  # [n_items] int32
-    read_items: jax.Array,      # [B, R] int32 (padded with -1)
-    read_versions: jax.Array,   # [B, R] int32
-) -> jax.Array:
-    """For each of B transactions: all read items unchanged -> True."""
-    valid_slot = read_items >= 0
-    current = store_versions[jnp.clip(read_items, 0, store_versions.shape[0] - 1)]
-    ok = jnp.where(valid_slot, current == read_versions, True)
-    return jnp.all(ok, axis=1)
+def _pad_bucket(n: int, lo: int = 8) -> int:
+    """Smallest power of two >= n (floored at ``lo``).
+
+    Packing widths are quantized to power-of-two buckets so the jit'd
+    validation (and the Pallas kernel) see a handful of recurring shapes
+    instead of one shape per batch — certification batches vary row count
+    and read-set length every drain, and per-batch recompiles would eat the
+    entire batching win.
+    """
+    b = lo
+    while b < n:
+        b <<= 1
+    return b
+
+
+def _scatter_rows(
+    lens: np.ndarray, flat_a: np.ndarray, flat_b: np.ndarray | None,
+    r: int, fill_a: int,
+) -> Tuple[np.ndarray, np.ndarray | None]:
+    """Scatter flat per-row segments into padded [B, r] arrays.
+
+    ``flat_b`` may be None to pack a single column.
+    """
+    b = lens.shape[0]
+    if b and int(lens[0]) == r and bool((lens == r).all()):
+        # uniform rows fill the padded shape exactly: pure reshape+cast
+        return (flat_a.astype(np.int32).reshape(b, r),
+                None if flat_b is None else
+                flat_b.astype(np.int32).reshape(b, r))
+    items = np.full((b, r), fill_a, dtype=np.int32)
+    vals = None if flat_b is None else np.zeros((b, r), dtype=np.int32)
+    total = int(lens.sum())
+    if total:
+        rows = np.repeat(np.arange(b), lens)
+        starts = np.concatenate(([0], np.cumsum(lens)[:-1]))
+        cols = np.arange(total) - np.repeat(starts, lens)
+        items[rows, cols] = flat_a
+        if vals is not None:
+            vals[rows, cols] = flat_b
+    return items, vals
 
 
 def pack_read_sets(
-    txns: Sequence[Transaction], pad_to: int | None = None
+    txns: Sequence[Transaction], pad_to: int | None = None,
+    pow2: bool = True,
 ) -> Tuple[np.ndarray, np.ndarray]:
-    """Pack per-transaction read sets into padded [B, R] arrays."""
-    r = max((len(t.read_set) for t in txns), default=1)
-    r = max(r, 1)
+    """Pack per-transaction read sets into padded [B, R] arrays.
+
+    ``pow2=True`` (the default) rounds R up to a power-of-two bucket; pass
+    ``pad_to`` to force a wider row.  The per-entry work is a C-level
+    buffer copy (``array.array.extend`` + one vectorized scatter), keeping
+    packing far below the per-entry cost of the python validation loop.
+    """
+    b = len(txns)
+    lens = np.fromiter((len(t.read_log) for t in txns), np.int64,
+                       count=b) >> 1
+    r = max(1, int(lens.max()) if b else 1)
     if pad_to is not None:
         r = max(r, pad_to)
+    if pow2:
+        r = _pad_bucket(r)
+    # buffer-protocol copies pack the whole batch: each interleaved int32
+    # log lands in a preallocated numpy buffer (no per-txn allocations),
+    # deinterleaved by a vectorized reshape
+    out = np.empty(int(lens.sum()) * 2, np.int32)
+    mv = memoryview(out)
+    pos = 0
+    for t in txns:
+        n = len(t.read_log)
+        mv[pos:pos + n] = t.read_log
+        pos += n
+    flat = out.reshape(-1, 2)
+    return _scatter_rows(lens, flat[:, 0], flat[:, 1], r, -1)
+
+
+def pack_write_sets(
+    txns: Sequence[Transaction], pad_to: int | None = None,
+    pow2: bool = True,
+) -> np.ndarray:
+    """Pack per-transaction write *items* into a padded [B, W] array.
+
+    -1 padded like the read-set packing so the certification kernels can
+    mask them; the lock check only needs the items (write values stay in
+    the per-transaction dicts that ``apply_batch`` consumes).
+    """
     b = len(txns)
-    items = np.full((b, r), -1, dtype=np.int32)
-    vers = np.zeros((b, r), dtype=np.int32)
-    for i, t in enumerate(txns):
-        for j, e in enumerate(t.read_set):
-            items[i, j] = e.item
-            vers[i, j] = e.version
-    return items, vers
+    lens = np.fromiter((len(t.write_set) for t in txns), np.int64, count=b)
+    w = max(1, int(lens.max()) if b else 1)
+    if pad_to is not None:
+        w = max(w, pad_to)
+    if pow2:
+        w = _pad_bucket(w)
+    flat_i = _read_log()
+    for t in txns:
+        flat_i.extend(t.write_set.keys())
+    return _scatter_rows(
+        lens,
+        np.frombuffer(flat_i, dtype=np.int32) if flat_i else np.empty(0, np.int32),
+        None, w, -1)[0]
 
 
 def validate_batch(store: VersionedStore, txns: Sequence[Transaction],
+                   locks: np.ndarray | None = None,
                    backend: str = "auto") -> np.ndarray:
-    """Batched TL2 validation of ``txns`` against ``store``.
+    """Batched TL2 certification of ``txns`` against ``store``.
 
-    Dispatches to the Pallas certification kernel on TPU
-    (``repro.kernels.lease_validate`` — VMEM-chunked gather/compare) and to
-    the jit'd jnp path elsewhere; tests assert the two agree bitwise.
+    Packs read *and* write sets (power-of-two padded) and dispatches through
+    :func:`repro.kernels.ops.validate_transactions` — the Pallas kernel on
+    TPU, the jit'd jnp oracle elsewhere; tests assert the two agree bitwise.
+
+    ``locks`` is an optional [n_items] 0/1 array of write locks (item leased
+    away per the lease layer): a transaction writing a locked item fails
+    certification on both backends.
     """
     if not txns:
         return np.zeros((0,), dtype=bool)
-    items, vers = pack_read_sets(txns)
-    use_pallas = backend == "pallas" or (
-        backend == "auto" and jax.default_backend() == "tpu")
-    if use_pallas:
-        from repro.kernels.lease_validate import lease_validate
+    from repro.kernels.ops import validate_transactions
 
-        out = lease_validate(
-            jnp.asarray(store.versions, dtype=jnp.int32),
-            jnp.asarray(items), jnp.asarray(vers),
-            jnp.zeros((store.n_items,), jnp.int32),
-            jnp.full((len(txns), 1), -1, jnp.int32),
-        )
-    else:
-        out = _validate_batch_jit(
-            jnp.asarray(store.versions, dtype=jnp.int32),
-            jnp.asarray(items),
-            jnp.asarray(vers),
-        )
-    return np.asarray(out)
+    items, vers = pack_read_sets(txns)
+    # without locks every write check passes — skip the write packing and
+    # let the kernel mask an empty [B, 1] column
+    witems = pack_write_sets(txns) if locks is not None else None
+    # bucket the row count too: the jit'd kernels are shape-specialized,
+    # and drain sizes vary every instant — padded rows are all-masked
+    # (items -1) and certify True, sliced off below
+    b = len(txns)
+    bp = _pad_bucket(b)
+    if bp != b:
+        items = np.pad(items, ((0, bp - b), (0, 0)), constant_values=-1)
+        vers = np.pad(vers, ((0, bp - b), (0, 0)))
+        if witems is not None:
+            witems = np.pad(witems, ((0, bp - b), (0, 0)),
+                            constant_values=-1)
+    out = validate_transactions(
+        store.versions.astype(np.int32),     # numpy cast beats device cast
+        items,
+        vers,
+        write_locks=locks,
+        write_items=witems,
+        backend=backend,
+    )
+    return np.asarray(out[:b])

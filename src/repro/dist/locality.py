@@ -55,7 +55,9 @@ class RouterDefaults:
 
     policy: str = "short"          # DTD cost policy: "local"|"short"|"long"
     arbitration: str = "priced"    # "steps" | "priced" | "hybrid"
-    max_cpu: float = 0.85          # constraint (3) threshold
+    # constraint (3) threshold, re-swept against the fixed CpuMeter
+    # (benchmarks/overload.py --sweep-max-cpu; see DTDConfig.max_cpu)
+    max_cpu: float = 0.9
     freq_tau_ms: float = 500.0     # LC access-frequency decay constant
 
 

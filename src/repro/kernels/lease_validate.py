@@ -78,6 +78,15 @@ def lease_validate(
     chunk: int = 4096,
     interpret: bool = False,
 ) -> jax.Array:
+    # normalize dtypes at the boundary: callers hand numpy buffers of
+    # whatever width their logs use; a silent int64 view of an int32 buffer
+    # once produced garbage write items (see tests/test_certify.py lock
+    # parity), so the kernel refuses to rely on caller dtypes
+    store_versions = jnp.asarray(store_versions, jnp.int32)
+    read_items = jnp.asarray(read_items, jnp.int32)
+    read_versions = jnp.asarray(read_versions, jnp.int32)
+    write_locks = jnp.asarray(write_locks, jnp.int32)
+    write_items = jnp.asarray(write_items, jnp.int32)
     b, r = read_items.shape
     n = store_versions.shape[0]
     chunk = min(chunk, n)

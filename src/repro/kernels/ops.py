@@ -43,17 +43,32 @@ def ssd(x, dt, a, b_mat, c_mat, *, chunk=256, h0=None, backend: str = "auto"):
     return ref.ssd_ref(x, dt, a, b_mat, c_mat, chunk=chunk, h0=h0)
 
 
+@jax.jit
+def _lease_validate_ref_jit(store_versions, read_items, read_versions,
+                            write_locks, write_items):
+    return ref.lease_validate_ref(store_versions, read_items, read_versions,
+                                  write_locks > 0, write_items)
+
+
 def validate_transactions(
     store_versions, read_items, read_versions,
     write_locks=None, write_items=None, *, backend: str = "auto",
 ):
+    """Batched TL2 certification — the single dispatch point both the
+    simulator (``repro.core.stm.validate_batch``) and the serving certifier
+    (``repro.serve.certifier``) go through.  Write locks default to none
+    (all zeros); both backends honor them identically.
+    """
     b = read_items.shape[0]
+    store_versions = jnp.asarray(store_versions, jnp.int32)
     if write_locks is None:
         write_locks = jnp.zeros_like(store_versions)
+    else:
+        write_locks = jnp.asarray(write_locks, jnp.int32)
     if write_items is None:
         write_items = jnp.full((b, 1), -1, jnp.int32)
     if _use_pallas(backend):
         return _lease_validate(store_versions, read_items, read_versions,
                                write_locks, write_items)
-    return ref.lease_validate_ref(store_versions, read_items, read_versions,
-                                  write_locks > 0, write_items)
+    return _lease_validate_ref_jit(store_versions, read_items, read_versions,
+                                   write_locks, write_items)

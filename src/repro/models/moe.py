@@ -20,6 +20,14 @@ visit the expert shard (state owner) by *being already there* (replication
 over the model axis), while the alternative — all_gathering expert weights
 to the tokens — is the "migrate state" branch.  `repro.dist.locality`
 prices both with the paper's SC cost formula.
+
+A third path, :func:`moe_sharded_a2a`, shards the tokens over the model
+axis too and moves only the *routed* activations with a pair of
+``all_to_all`` collectives — the literal token-dispatch plan the pricing
+model calls ``dispatch_s``.  :func:`moe_apply` consults
+:func:`repro.dist.locality.price_moe_dispatch` per
+``(tokens_per_device, ep_degree)`` cell (verdicts cached) and picks a2a
+vs. the replicated-token path instead of always replicating.
 """
 from __future__ import annotations
 
@@ -252,13 +260,193 @@ def moe_sharded(
     return out
 
 
+# ---------------------------------------------------------------------------
+# Token all-to-all path (the priced "dispatch" plan)
+# ---------------------------------------------------------------------------
+
+def _moe_local_a2a(
+    x_loc: jax.Array,             # [T_loc, d] (this device's token shard)
+    router: jax.Array,            # [d, E]
+    wg: jax.Array, wu: jax.Array, wd: jax.Array,   # [n_e, d, f] / [n_e, f, d]
+    *,
+    cfg: ModelConfig,
+    model_axis: str,
+    model_size: int,
+    capacity: int,
+) -> jax.Array:
+    """Per-device body: route my tokens, a2a them to their expert owners,
+    FFN there, a2a the outputs back, combine with my gates.
+
+    Requires ``tp == 1`` (each model rank owns whole experts), so the pair
+    of ``all_to_all`` collectives is the layer's entire wire traffic —
+    exactly the ``dispatch_bytes`` term of ``price_moe_dispatch``.
+    ``capacity`` bounds the routed rows per (source, destination) pair.
+    """
+    m = cfg.moe
+    ep, tp, n_e, _ = chunk_plan(m.n_experts, model_size)
+    assert tp == 1, "a2a dispatch needs whole experts per model rank"
+    t_loc, d = x_loc.shape
+    acc_dt = x_loc.dtype
+    logits = x_loc.astype(jnp.float32) @ router.astype(jnp.float32)
+    gates, ids = router_topk(logits, m.top_k, norm_topk=(m.n_shared == 0),
+                             router_scale=m.router_scale)
+
+    flat_ids = ids.reshape(-1)                            # [T*K]
+    flat_gates = gates.reshape(-1)
+    dest = flat_ids // n_e                                # owning ep rank
+    le = flat_ids % n_e                                   # its local expert
+    token_of = jnp.arange(t_loc * m.top_k, dtype=jnp.int32) // m.top_k
+    # per-destination arrival slot (for capacity bounding), like the
+    # replicated path's per-expert slots
+    onehot = jax.nn.one_hot(dest, ep, dtype=jnp.int32)
+    slot = jnp.cumsum(onehot, axis=0) - onehot            # [T*K, ep]
+    slot_d = jnp.sum(slot * onehot, axis=1)
+    keep = slot_d < capacity
+    row = jnp.where(keep, dest * capacity + slot_d, ep * capacity)
+
+    nbuf = ep * capacity
+    send_x = jnp.zeros((nbuf + 1, d), x_loc.dtype).at[row].set(
+        jnp.take(x_loc, token_of, axis=0), mode="drop")[:nbuf]
+    send_le = jnp.full((nbuf + 1,), n_e, jnp.int32).at[row].set(
+        jnp.where(keep, le, n_e), mode="drop")[:nbuf]
+    # sender-side combine metadata — never crosses the wire
+    tok_slot = jnp.full((nbuf + 1,), t_loc, jnp.int32).at[row].set(
+        jnp.where(keep, token_of, t_loc), mode="drop")[:nbuf]
+    gate_slot = jnp.zeros((nbuf + 1,), jnp.float32).at[row].set(
+        jnp.where(keep, flat_gates, 0.0), mode="drop")[:nbuf]
+
+    recv_x = jax.lax.all_to_all(send_x, model_axis, 0, 0, tiled=True)
+    recv_le = jax.lax.all_to_all(send_le, model_axis, 0, 0, tiled=True)
+    out = jnp.zeros((nbuf, d), acc_dt)
+    for e in range(n_e):
+        sel = (recv_le == e)[:, None]
+        h = jax.nn.silu(recv_x @ wg[e]) * (recv_x @ wu[e])
+        out = out + jnp.where(sel, (h @ wd[e]).astype(acc_dt),
+                              jnp.zeros((), acc_dt))
+    # the return a2a lands each expert output back in its sender's slot
+    back = jax.lax.all_to_all(out, model_axis, 0, 0, tiled=True)
+    return jnp.zeros((t_loc, d), acc_dt).at[tok_slot].add(
+        back * gate_slot[:, None].astype(acc_dt), mode="drop")
+
+
+def _a2a_plan(cfg: ModelConfig, t_total: int, mesh, batch_axes, model_axis):
+    """(feasible, token_shards, ep): a2a needs tp == 1 and an even split of
+    the flattened token dim over (batch axes × model axis)."""
+    model_size = int(mesh.shape[model_axis])
+    ep, tp, _, _ = chunk_plan(cfg.moe.n_experts, model_size)
+    shards = model_size
+    for a in batch_axes:
+        shards *= int(mesh.shape[a])
+    return (tp == 1 and t_total % shards == 0), shards, ep
+
+
+def moe_sharded_a2a(
+    p: Dict[str, Any],
+    x: jax.Array,                 # [B, S, d]
+    cfg: ModelConfig,
+    mesh: jax.sharding.Mesh,
+    *,
+    batch_axes: Tuple[str, ...] = ("data",),
+    model_axis: str = "model",
+    capacity_factor: float = 1.25,
+) -> jax.Array:
+    """Token-dispatch MoE: tokens sharded over (batch × model) axes, routed
+    activations moved by a2a pairs; expert weights stay put (EP, tp=1)."""
+    from jax.experimental.shard_map import shard_map
+
+    m = cfg.moe
+    b, s, d = x.shape
+    feasible, shards, ep = _a2a_plan(cfg, b * s, mesh, batch_axes, model_axis)
+    assert feasible, (b * s, shards, dict(mesh.shape))
+    t_loc = (b * s) // shards
+    capacity = max(8, -(-int(t_loc * m.top_k * capacity_factor) // ep))
+    model_size = int(mesh.shape[model_axis])
+
+    def body(xt, router, wg, wu, wd):
+        y = _moe_local_a2a(
+            xt, router, wg[0], wu[0], wd[0], cfg=cfg, model_axis=model_axis,
+            model_size=model_size, capacity=capacity)
+        return y.astype(xt.dtype)
+
+    spec = P((*tuple(batch_axes), model_axis), None)
+    out = shard_map(
+        body, mesh=mesh,
+        in_specs=(
+            spec,
+            P(None, None),
+            P(model_axis, None, None, None),
+            P(model_axis, None, None, None),
+            P(model_axis, None, None, None),
+        ),
+        out_specs=spec,
+        check_rep=False,
+    )(x.reshape(b * s, d), p["router"], p["experts"]["w_gate"],
+      p["experts"]["w_up"], p["experts"]["w_down"])
+    y = out.reshape(b, s, d)
+    if m.n_shared:
+        y = y + mlp_apply(p["shared"], x, "swiglu")
+    return y
+
+
+# ---------------------------------------------------------------------------
+# Dispatch autotuning: the DTD verdict, cached per cell
+# ---------------------------------------------------------------------------
+
+# (tokens_per_device, ep_degree, layer dims) -> prefer token a2a.  One
+# pricing call per cell ever: decode/prefill shapes recur, so the verdict
+# lookup is a dict hit on the trace path.
+_DISPATCH_CACHE: Dict[Tuple[int, ...], bool] = {}
+
+
+def dispatch_verdict(cfg: ModelConfig, tokens_per_device: int,
+                     ep_degree: int) -> bool:
+    """Cached ``price_moe_dispatch`` verdict for one (T/device, ep) cell."""
+    m = cfg.moe
+    key = (tokens_per_device, ep_degree, cfg.d_model, m.top_k,
+           m.n_experts, m.d_expert)
+    v = _DISPATCH_CACHE.get(key)
+    if v is None:
+        from repro.dist.locality import price_moe_dispatch
+
+        v = price_moe_dispatch(
+            tokens_per_device, cfg.d_model, m.top_k, m.n_experts,
+            m.d_expert, ep_degree).prefer_dispatch
+        _DISPATCH_CACHE[key] = v
+    return v
+
+
 def moe_apply(
     p: Dict[str, Any],
     x: jax.Array,
     cfg: ModelConfig,
     mesh: Optional[jax.sharding.Mesh] = None,
+    *,
+    dispatch: str = "auto",
     **kw,
 ) -> jax.Array:
+    """MoE layer entry point with autotuned dispatch.
+
+    ``dispatch``: ``"auto"`` consults the cached
+    :func:`repro.dist.locality.price_moe_dispatch` verdict for this
+    (tokens_per_device, ep_degree) cell — token a2a when the routed
+    activations are lighter on the wire than replication, the
+    replicated-token path otherwise; ``"a2a"`` / ``"replicate"`` force a
+    path (a2a falls back to replicate when infeasible for the mesh/shape).
+    """
     if mesh is None or mesh.shape.get("model", 1) == 1:
         return moe_ref(p, x, cfg)
+    if dispatch not in ("auto", "a2a", "replicate"):
+        raise ValueError(f"unknown moe dispatch {dispatch!r}")
+    use_a2a = False
+    if dispatch != "replicate":
+        b, s, _ = x.shape
+        batch_axes = tuple(kw.get("batch_axes", ("data",)))
+        model_axis = kw.get("model_axis", "model")
+        feasible, shards, ep = _a2a_plan(cfg, b * s, mesh, batch_axes,
+                                         model_axis)
+        use_a2a = feasible and (
+            dispatch == "a2a"
+            or dispatch_verdict(cfg, (b * s) // shards, ep))
+    if use_a2a:
+        return moe_sharded_a2a(p, x, cfg, mesh, **kw)
     return moe_sharded(p, x, cfg, mesh, **kw)

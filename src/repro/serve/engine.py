@@ -10,8 +10,10 @@ Two backends behind one engine:
 Per engine step: (1) the geo load-balancer assigns incoming requests to
 origin pods, (2) the :class:`LocalityRouter` (the paper's DTD) picks
 local/forward/acquire per request, applying KV-state migrations, (3) each
-pod runs one batched decode over its active sessions, (4) queue depths
-feed back as the CPU_i statistic.
+pod certifies its forwarded batch in one :mod:`repro.serve.certifier`
+validate dispatch (stale lease epochs re-route), (4) each pod runs one
+batched decode over its active sessions, (5) queue depths feed back as
+the CPU_i statistic.
 """
 from __future__ import annotations
 
@@ -23,6 +25,7 @@ import numpy as np
 
 from repro.dist.locality import DCN_RTT_S, price_session_dispatch
 from repro.launch.hlo_analysis import HBM_BW
+from .certifier import StepCertifier
 from .router import LocalityRouter, RouteDecision
 
 # router-clock advance per decode step when the backend reports no decode
@@ -157,9 +160,12 @@ class EngineMetrics:
     transfers: int = 0
     forwards: int = 0
     local: int = 0
+    # certification counters live in the StepCertifier (single source of
+    # truth); as_dict merges them when the engine links it here
+    cert: Optional[object] = None
 
     def as_dict(self) -> Dict[str, float]:
-        return {
+        out = {
             "steps": self.steps, "tokens": self.tokens,
             "sim_time_s": self.sim_time_s,
             "tokens_per_s": self.tokens / max(1e-9, self.sim_time_s),
@@ -167,13 +173,20 @@ class EngineMetrics:
             "transfers": self.transfers, "forwards": self.forwards,
             "local": self.local,
         }
+        if self.cert is not None:
+            out.update(self.cert.as_dict())
+        return out
 
 
 class MultiPodEngine:
-    def __init__(self, n_pods: int, backend, router: LocalityRouter) -> None:
+    def __init__(self, n_pods: int, backend, router: LocalityRouter,
+                 certifier: Optional[StepCertifier] = None) -> None:
         self.n_pods = n_pods
         self.backend = backend
         self.router = router
+        # forwarded requests are certified at the owning pod in one batch
+        # per engine step (the paper's commit phase at the lease owner)
+        self.certifier = certifier or StepCertifier(n_pods)
         self.queues: List[List[Request]] = [[] for _ in range(n_pods)]
         self.session_len: Dict[int, int] = {}
         self.session_home: Dict[int, int] = {}
@@ -184,7 +197,7 @@ class MultiPodEngine:
         # per-pod busy clocks: pods decode independently (no cross-pod
         # barrier), so simulated wall time is the busiest pod's clock
         self._pod_clock = np.zeros((n_pods,), np.float64)
-        self.metrics = EngineMetrics()
+        self.metrics = EngineMetrics(cert=self.certifier.metrics)
 
     def submit(self, req: Request) -> RouteDecision:
         m = self.metrics
@@ -221,9 +234,18 @@ class MultiPodEngine:
             m.forwards += 1
         else:
             m.local += 1
+        # the ownership round stamps the session's lease epoch at every
+        # pod (idempotent when ownership didn't move): forwards still in
+        # flight with an older epoch fail certification and re-route
+        self.certifier.bump(req.sid, dec.epoch)
         self.backend.ensure(dec.target, req.sid, length)
         self.session_home[req.sid] = dec.target
-        self.queues[dec.target].append(req)
+        if dec.action == "forward":
+            # forwarded work is certified at the owner before it may decode:
+            # it joins the pod's next per-step certification batch
+            self.certifier.enqueue(dec.target, req, dec.epoch)
+        else:
+            self.queues[dec.target].append(req)
         m.wire_bytes += dec.wire_bytes
         if dec.wire_s > 0:
             # receiver waits out the RTT; byte serialization occupies the
@@ -255,6 +277,17 @@ class MultiPodEngine:
         for pod in range(self.n_pods):
             # inbound KV/requests must land before the pod decodes them
             pod_t = self._wire_time_s(pod)
+            # certify the step's forwarded batch in one validate dispatch;
+            # its time lands on the pod's busy clock (scaling with the
+            # batch, not a per-request constant)
+            passed, aborted, t_cert = self.certifier.drain(pod)
+            pod_t += t_cert
+            self.queues[pod].extend(passed)
+            for r in aborted:
+                # the session was acquired away while the forward was in
+                # flight: certification rejected the stale lease epoch —
+                # re-route against the current ownership ledger
+                self.submit(r)
             reqs = self.queues[pod]
             if reqs:
                 sids = []
@@ -292,6 +325,7 @@ class MultiPodEngine:
 
     def drain(self, max_steps: int = 10_000) -> None:
         steps = 0
-        while any(self.queues) and steps < max_steps:
+        while (any(self.queues) or self.certifier.has_pending()) \
+                and steps < max_steps:
             self.run_step()
             steps += 1

@@ -57,6 +57,11 @@ class RouteDecision:
     action: str                  # "local" | "forward" | "acquire"
     wire_bytes: float = 0.0
     wire_s: float = 0.0          # DCN time of the chosen plan, RTT included
+    # the session's lease epoch after this decision: bumped on every
+    # ownership move, snapshotted onto forwarded requests so the owner's
+    # batched certifier (repro.serve.certifier) can reject forwards that
+    # lost their lease while on the wire
+    epoch: int = 0
 
 
 @dataclass
@@ -94,6 +99,7 @@ class LocalityRouter:
         self.arbitration = arbitration
         self.dtd = DTD(DTDConfig(policy=policy, max_cpu=max_cpu), n_pods)
         self.owner: Dict[int, int] = {}          # session -> owning pod
+        self.lease_epoch: Dict[int, int] = {}    # session -> ownership epoch
         self.freq_tau_ms = freq_tau_ms
         self._freq_by_sid: Dict[int, DecayedFrequency] = {}
         self.cpu = np.zeros((n_pods,), np.float64)
@@ -129,10 +135,11 @@ class LocalityRouter:
         m.requests += 1
         self._touch(origin, sid)
         owner = self.owner.get(sid, -1)
+        epoch = self.lease_epoch.get(sid, 0)
 
         if owner == origin:
             m.local_hits += 1
-            return RouteDecision(origin, "local")
+            return RouteDecision(origin, "local", epoch=epoch)
 
         kv_bytes = session_len * self.kv_bytes_per_token
         # request/response sizes are already bytes, not tokens
@@ -141,17 +148,23 @@ class LocalityRouter:
             wire_bytes_per_token=1.0, seq_shards=self.seq_shards)
 
         if owner < 0:
-            # new session: place at the DTD's choice (long-term policy may
-            # pick the attractor; default to origin)
+            # new session (or re-placement after evict): place at the DTD's
+            # choice (long-term policy may pick the attractor; default to
+            # origin).  Every placement is an ownership transition, so the
+            # epoch bumps — forwards snapshotted against a prior placement
+            # of a recycled sid must not certify against the new one
             target = self._dtd_target(origin, sid, owner)
             self.owner[sid] = target
+            epoch += 1
+            self.lease_epoch[sid] = epoch
             if target == origin:
                 m.local_hits += 1
-                return RouteDecision(origin, "local")
+                return RouteDecision(origin, "local", epoch=epoch)
             m.forwards += 1
             wire = self.request_bytes + self.response_bytes
             m.wire_bytes += wire
-            return RouteDecision(target, "forward", wire, costs.migrate_work_s)
+            return RouteDecision(target, "forward", wire,
+                                 costs.migrate_work_s, epoch=epoch)
 
         target = self._dtd_target(origin, sid, owner)
         action = "forward" if target == owner else "acquire"
@@ -162,13 +175,17 @@ class LocalityRouter:
             # migrate the work to the state owner
             m.forwards += 1
             m.wire_bytes += costs.work_bytes
-            return RouteDecision(owner, "forward",
-                                 costs.work_bytes, costs.migrate_work_s)
-        # migrate the state to the target (lease + KV move)
+            return RouteDecision(owner, "forward", costs.work_bytes,
+                                 costs.migrate_work_s, epoch=epoch)
+        # migrate the state to the target (lease + KV move): the epoch bump
+        # invalidates forwards still in flight toward the old owner
         self.owner[sid] = target
+        epoch += 1
+        self.lease_epoch[sid] = epoch
         m.acquires += 1
         m.wire_bytes += kv_bytes
-        return RouteDecision(target, "acquire", kv_bytes, costs.migrate_state_s)
+        return RouteDecision(target, "acquire", kv_bytes,
+                             costs.migrate_state_s, epoch=epoch)
 
     def _arbitrate(self, origin: int, owner: int, target: int, action: str,
                    costs) -> Tuple[str, int]:
@@ -210,4 +227,6 @@ class LocalityRouter:
 
     def evict(self, sid: int) -> None:
         self.owner.pop(sid, None)
+        # lease_epoch survives eviction on purpose: a recycled sid keeps
+        # counting up, so stale in-flight forwards can never alias epoch 0
         self._freq_by_sid.pop(sid, None)
