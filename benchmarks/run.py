@@ -9,6 +9,7 @@ harness (full parameters via each module's own CLI):
 * Fig. 5         — bank.py --threads 4 (appendix)
 * §Roofline      — roofline.py      (reads results/dryrun)
 * serving layer  — serve_locality.py (framework-level locality)
+* self-optimization — planner.py    (proactive placement planner)
 """
 from __future__ import annotations
 
@@ -51,6 +52,13 @@ def main() -> None:
     print("== Serving-layer locality (framework integration)")
     print("=" * 72)
     serve_locality.main(["--localities", "0.0", "0.9"])
+
+    print()
+    print("=" * 72)
+    print("== Proactive placement planner (planner-on vs planner-off)")
+    print("=" * 72)
+    from benchmarks import planner
+    planner.main(["--smoke", "--out", "/tmp/BENCH_planner_run.json"])
 
     print()
     print("=" * 72)

@@ -41,18 +41,25 @@ GRID = [
 
 def run_point(arch: str, policy: str, locality: float, *, n_pods: int = 8,
               n_sessions: int = 256, steps: int = 80, seed: int = 0,
-              arbitration: str = "steps", seeds: int = 1) -> Dict:
+              arbitration: str = "steps", seeds: int = 1,
+              plan_epoch_ms: float = 0.0) -> Dict:
     if seeds > 1:
         pts = [run_point(arch, policy, locality, n_pods=n_pods,
                          n_sessions=n_sessions, steps=steps, seed=seed + i,
-                         arbitration=arbitration) for i in range(seeds)]
+                         arbitration=arbitration, plan_epoch_ms=plan_epoch_ms)
+               for i in range(seeds)]
         return {k: sum(p[k] for p in pts) / seeds for k in pts[0]}
     cfg = get_config(arch)
     kv_per_tok = 2.0 * 2 * cfg.n_kv_heads * cfg.head_dim * cfg.n_layers \
         if cfg.n_kv_heads else 4096.0 * cfg.n_layers
     router = LocalityRouter(n_pods, policy=policy, arbitration=arbitration,
                             kv_bytes_per_token=kv_per_tok)
-    eng = MultiPodEngine(n_pods, SimBackend(cfg), router)
+    planner = None
+    if plan_epoch_ms > 0:
+        from repro.plan import PlacementPlanner
+        planner = PlacementPlanner.for_serving(
+            n_pods, n_sessions, epoch_ms=plan_epoch_ms)
+    eng = MultiPodEngine(n_pods, SimBackend(cfg), router, planner=planner)
     rng = np.random.default_rng(seed)
     for _ in range(steps):
         for _ in range(2 * n_pods):
@@ -70,6 +77,9 @@ def run_point(arch: str, policy: str, locality: float, *, n_pods: int = 8,
         "transfers": m["transfers"],
         "forwards": m["forwards"],
         "flips": router.metrics.flips,
+        "plan_moves": m["plan_moves"],
+        "plan_prefetches": m["plan_prefetches"],
+        "plan_GB": m["plan_GB"],
     }
 
 

@@ -1,9 +1,18 @@
 """Serving example: real decode across 2 pods with session migration.
 
-A small model decodes real tokens; the locality router decides per request
-whether to forward it to the session's owner pod or to migrate the KV
-cache.  Watch a session physically move pods (its cache column is
-exported/imported) and decoding stay bit-consistent.
+Phase 1 — reactive routing: a small model decodes real tokens; the
+locality router decides per request whether to forward it to the session's
+owner pod or to migrate the KV cache.  Watch a session physically move
+pods (its cache column is exported/imported) and decoding stay
+bit-consistent.
+
+Phase 2 — proactive planning: a hot session keeps arriving at the "wrong"
+pod in bursts.  The reactive router forwards every one of those requests
+(the KV outweighs the work description, so the byte verdict never
+acquires).  With a :class:`repro.plan.PlacementPlanner` attached, the
+affinity loop notices the dominant origin between bursts and *prefetches*
+the session to it — before the next burst arrives, off the request path —
+after which the burst decodes locally.
 
     PYTHONPATH=src python examples/serve_migration.py
 """
@@ -15,19 +24,19 @@ import numpy as np
 from repro.configs import get_smoke_config
 from repro.models import decoder
 from repro.models.common import init_params
+from repro.plan import PlacementPlanner, PlanConfig
 from repro.serve.engine import MultiPodEngine, RealBackend, Request
 from repro.serve.router import LocalityRouter
 
 
-def main():
-    cfg = dataclasses.replace(get_smoke_config("glm4-9b"), dtype="float32")
+def reactive_phase(cfg, params):
     ctx = decoder.RunCtx(mesh=None, use_kernel="ref")
-    params = init_params(cfg, jax.random.PRNGKey(0))
     backend = RealBackend(cfg, ctx, params, n_pods=2, n_slots=8, max_len=96)
     router = LocalityRouter(2, policy="short", kv_bytes_per_token=64.0)
     eng = MultiPodEngine(2, backend, router)
 
     rng = np.random.default_rng(0)
+    print("phase 1 — reactive routing")
     print("step  sid  origin -> target  action    home")
     for step in range(10):
         sid = int(rng.integers(4))
@@ -43,6 +52,48 @@ def main():
           f"lease-reuse={router.metrics.lease_reuse_rate:.2f}")
     for pod, store in enumerate(backend.stores):
         print(f"pod {pod}: sessions={sorted(store.sessions)} ")
+
+
+def planner_phase(cfg, params):
+    ctx = decoder.RunCtx(mesh=None, use_kernel="ref")
+    backend = RealBackend(cfg, ctx, params, n_pods=2, n_slots=8, max_len=96)
+    # heavy per-token KV: the byte verdict always forwards, so only the
+    # planner can fix the placement
+    router = LocalityRouter(2, policy="short", arbitration="priced",
+                            kv_bytes_per_token=8192.0)
+    planner = PlacementPlanner(
+        2, 8, PlanConfig(epoch_ms=2.0, top_k=2, min_events=3.0,
+                         min_frac=0.6, margin=0.5, hysteresis_epochs=2),
+        grow=True)
+    eng = MultiPodEngine(2, backend, router, planner=planner)
+
+    print("\nphase 2 — proactive planning (hot session, bursty origin)")
+    eng.submit(Request(sid=0, origin=1, n_tokens=2))   # first lands on pod 1
+    eng.run_step()
+    print(f"burst 0 from pod 1: owner={router.owner[0]} (misplaced for "
+          f"the bursts that follow)")
+    for burst in range(3):
+        for _ in range(4):
+            dec = eng.submit(Request(sid=0, origin=0, n_tokens=1))
+            eng.run_step()
+        print(f"burst {burst + 1} from pod 0: owner={router.owner[0]} "
+              f"last_action={dec.action:8s} "
+              f"planned_moves={router.metrics.planned_moves}")
+        for _ in range(3):                 # idle gap: the planner epoch fires
+            eng.run_step()
+    eng.drain()
+    m = eng.metrics.as_dict()
+    print(f"planner: epochs={m['plan_epochs']} re-homes={m['plan_moves']} "
+          f"prefetches={m['plan_prefetches']} — session 0 now decodes "
+          f"locally at pod {router.owner[0]} "
+          f"(reactive acquires: {router.metrics.acquires})")
+
+
+def main():
+    cfg = dataclasses.replace(get_smoke_config("glm4-9b"), dtype="float32")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    reactive_phase(cfg, params)
+    planner_phase(cfg, params)
 
 
 if __name__ == "__main__":

@@ -123,6 +123,21 @@ class SimConfig:
     # elsewhere).  The two agree bitwise — tests force this to 1 to pin the
     # vectorized path against the sequential oracle.
     certify_jax_min: int = 8
+    # Commit-phase slot cost.  "amortized" (default, batched mode only):
+    # the group of transactions enabled together occupies ONE worker slot
+    # for cert_fixed_ms + len(group) * cert_per_txn_ms — simulated
+    # throughput, not just simulator wall-clock, reflects that the batched
+    # pipeline certifies the group in one kernel dispatch.  "per_txn": every
+    # transaction occupies its own slot for validate_ms + local_commit_ms —
+    # always used by the sequential oracle, and forced by the equivalence
+    # test to pin the batched drain as a pure vectorization.
+    cert_slot_mode: str = "amortized"
+    cert_fixed_ms: Optional[float] = None     # default: validate_ms
+    cert_per_txn_ms: Optional[float] = None   # default: local_commit_ms
+    # Proactive placement planner (repro.plan): score affinity-driven lease
+    # moves every plan.epoch_ms of simulated time and execute them as
+    # background prefetch requests through the lease managers (None = off).
+    plan: Optional["PlanConfig"] = None
 
 
 @dataclass
@@ -137,6 +152,8 @@ class Metrics:
     rw_certified: int = 0
     cert_batches: int = 0          # batched validate_batch drains issued
     cert_batch_txns: int = 0       # transactions certified through them
+    plan_epochs: int = 0           # planner invocations
+    plan_prefetches: int = 0       # background lease prefetches issued
     commit_times: List[Tuple[float, int]] = field(default_factory=list)
     commit_latency_sum: float = 0.0
 
@@ -173,6 +190,10 @@ class Replica:
         # verdict is settled by the next drain event (same instant)
         self.certify_queue: List["SimTxn"] = []
         self.certify_pending = False
+        # planner prefetches awaiting their LORs heading every queue: the
+        # drain to activeXacts=0 must only happen at the head, preserving
+        # the protocol invariant (drained => enabled) the free rules rely on
+        self.prefetch_waiters: List[List[LOR]] = []
 
 
 @dataclass
@@ -221,6 +242,15 @@ class Cluster:
                 np.int64, count=cfg.n_items)
         else:
             self._item_cc = None
+        # proactive placement planner (repro.plan): a global control loop
+        # with the same piggybacked-staleness view the DTD gets
+        self.planner = None
+        if cfg.plan is not None:
+            from repro.plan import PlacementPlanner
+
+            self.planner = PlacementPlanner(
+                cfg.n_nodes, cfg.n_classes, cfg.plan,
+                track_co=cfg.plan.co_gain > 0.0)
         self.t_throughput: List[Tuple[float, int, int]] = []  # (t, node, 1)
         for i in range(cfg.n_nodes):
             self.gcs.on_opt[i] = self._make_handler(i, self._on_opt)
@@ -241,6 +271,8 @@ class Cluster:
             for thread in range(cfg.threads_per_node):
                 self.events.schedule(0.0, (lambda n=node, t=thread: self._start_txn(n, t)))
         self._schedule_stats_sync()
+        if self.planner is not None:
+            self._schedule_plan_epoch()
         self.events.run(cfg.duration_ms)
         self._stopped = True
         self.events.run(cfg.duration_ms + cfg.drain_ms)
@@ -265,6 +297,59 @@ class Cluster:
             self.events.schedule(self.cfg.stats_update_ms, sync)
 
         self.events.schedule(self.cfg.stats_update_ms, sync)
+
+    # -- proactive placement (repro.plan) --------------------------------------
+    def _schedule_plan_epoch(self) -> None:
+        def epoch():
+            if self._stopped:
+                return
+            self._run_plan_epoch()
+            self.events.schedule(self.cfg.plan.epoch_ms, epoch)
+
+        self.events.schedule(self.cfg.plan.epoch_ms, epoch)
+
+    def _run_plan_epoch(self) -> None:
+        """Score all [class, node] lease moves in one jit'd evaluation and
+        issue the bounded plan as background prefetch requests.
+
+        A planned move costs one lease round (OAB request + URB free) *off*
+        any transaction's critical path; once the prefetched LOR heads its
+        queue, transactions at the target piggyback on it and the forward /
+        lease round-trip they used to pay disappears.  Safety is untouched:
+        the move is an ordinary lease request through the replicated
+        conflict queues.
+        """
+        from repro.core.dtd import C_AB, C_P2P, C_URB
+
+        alive = [i for i in range(self.cfg.n_nodes) if self.gcs.alive(i)]
+        if not alive:
+            return
+        self.metrics.plan_epochs += 1
+        coord = self.replicas[alive[0]]
+        n_cls = self.cfg.n_classes
+        owner = np.asarray(coord.lm.owner_view(), dtype=np.int32)
+        # a lease prefetch ships no state (write-sets replicate via URB
+        # regardless of ownership) — costs are the paper's step constants
+        step = self.cfg.latency.step_ms
+        fwd_cost = np.full((n_cls,), (C_P2P + C_URB) * step)
+        move_cost = np.full((n_cls,), (C_AB + C_URB) * step)
+        plan = self.planner.plan(
+            self.events.now, owner, np.zeros((n_cls,)), fwd_cost, move_cost,
+            coord.cpu_view)
+        executed = []
+        for mv in plan.moves:
+            if not self.gcs.alive(mv.dst):
+                continue
+            dlm = self.replicas[mv.dst].lm
+            if any(l.proc == mv.dst and not l.blocked for l in dlm.cq[mv.cc]):
+                continue                 # dst already holds / awaits it
+            req = LeaseRequest(
+                req_id=next(self._reqid), proc=mv.dst, ccs=(mv.cc,),
+                coarse=(self.cfg.lease_kind == "alc"), prefetch=True)
+            self.metrics.plan_prefetches += 1
+            self.gcs.oa_broadcast(mv.dst, ("lease", req))
+            executed.append(mv)
+        self.planner.committed(executed)
 
     # -- CPU slots -------------------------------------------------------------
     def _request_slot(self, node: int, fn: Callable[[], None]) -> None:
@@ -369,6 +454,10 @@ class Cluster:
         if target != node and self.gcs.alive(target) and self.cfg.forward.may_forward(txn.forwards):
             txn.forwards += 1
             self.metrics.forwards += 1
+            if self.planner is not None:
+                # the planner's target signal: work shipped away from origin
+                self.planner.affinity.record_forward(
+                    self.events.now, node, txn.ccs)
             # record the forward target NOW: if it fails while the message is
             # in flight (the GCS drops p2p to dead nodes), the view-change
             # handler must still see exec_node == failed to restart this
@@ -413,6 +502,8 @@ class Cluster:
 
     def _check_waiters(self, node: int) -> None:
         r = self.replicas[node]
+        if r.prefetch_waiters:
+            self._settle_prefetches(node)
         still: List[Tuple[SimTxn, List[LOR]]] = []
         ready: List[SimTxn] = []
         for (txn, lors) in r.waiters:
@@ -421,22 +512,72 @@ class Cluster:
             else:
                 still.append((txn, lors))
         r.waiters = still
+        if not ready:
+            return
+        cfg = self.cfg
+        if cfg.certify_mode == "batched" and cfg.cert_slot_mode == "amortized":
+            # PR-4's pipeline certifies the whole enabled group in ONE
+            # kernel dispatch, so the commit phase is one core's work:
+            # a single slot charges fixed + per-txn increment for the group
+            # instead of every transaction paying the full
+            # validate+commit on its own slot — simulated throughput, not
+            # just simulator wall-clock, reflects the batching
+            fixed = cfg.cert_fixed_ms if cfg.cert_fixed_ms is not None \
+                else cfg.validate_ms
+            per_txn = cfg.cert_per_txn_ms if cfg.cert_per_txn_ms is not None \
+                else cfg.local_commit_ms
+            dur = (fixed + per_txn * len(ready)) * r.slowdown
+
+            def start(group=tuple(ready), d=dur):
+                def fin():
+                    self._release_slot(node)
+                    for t in group:
+                        self._enqueue_certify(t, node)
+                self.events.schedule(d, fin)
+
+            self._request_slot(node, start)
+            return
         for txn in ready:
             # certification + commit processing is CPU work at the executing
             # node: occupy a worker slot for its (dilated) duration, so an
             # overloaded node's commit phase queues behind the external jobs
-            dur = (self.cfg.validate_ms + self.cfg.local_commit_ms) * r.slowdown
+            dur = (cfg.validate_ms + cfg.local_commit_ms) * r.slowdown
 
             def start(t=txn, d=dur):
                 def fin():
                     self._release_slot(node)
-                    if self.cfg.certify_mode == "batched":
+                    if cfg.certify_mode == "batched":
                         self._enqueue_certify(t, node)
                     else:
                         self._validate_and_commit(t, node)
                 self.events.schedule(d, fin)
 
             self._request_slot(node, start)
+
+    def _settle_prefetches(self, node: int) -> None:
+        """Drain prefetched LORs that now head every queue they touch.
+
+        A prefetch carries no transaction, so its LOR must end at
+        activeXacts=0 to be freeable — but draining it while still queued
+        behind another owner would create a dormant *non-head* LOR that no
+        protocol event ever frees (the blocked-and-drained rule only fires
+        at the head), wedging the class.  So the drain waits for
+        ``is_enabled``, exactly like a transaction's commit phase: at the
+        head, a drained unblocked LOR is the protocol's ordinary dormant
+        state (piggybackable; freed the moment a conflicting request blocks
+        it), and one blocked while waiting is freed here as it drains.
+        """
+        r = self.replicas[node]
+        still: List[List[LOR]] = []
+        to_free: List[LOR] = []
+        for lors in r.prefetch_waiters:
+            if r.lm.is_enabled(lors):
+                to_free.extend(r.lm.finished_xact(lors))
+            else:
+                still.append(lors)
+        r.prefetch_waiters = still
+        if to_free:
+            self._ur_broadcast_from(node, ("freed", [l.key() for l in to_free]))
 
     # -- batched certification drain ------------------------------------------
     def _enqueue_certify(self, txn: SimTxn, node: int) -> None:
@@ -537,6 +678,9 @@ class Cluster:
     def _certify_failed(self, txn: SimTxn, node: int) -> None:
         r = self.replicas[node]
         self.metrics.aborts += 1
+        if self.planner is not None:
+            # contention at the executing node damps its affinity
+            self.planner.affinity.record_abort(self.events.now, node, txn.ccs)
         txn.reexecs += 1
         if txn.reexecs > self.cfg.forward.max_reexec:
             # give up: release leases, notify origin with an abort
@@ -597,6 +741,9 @@ class Cluster:
                 },
             ),
         )
+        if self.planner is not None:
+            self.planner.affinity.record_commit(
+                self.events.now, txn.origin, txn.ccs)
         self._finish_leases(txn, node)
 
     def _finish_leases(self, txn: SimTxn, node: int) -> None:
@@ -643,10 +790,20 @@ class Cluster:
         r = self.replicas[node]
         lors = r.lm.on_to_deliver(req)
         if req.proc == node:
-            txn = r.pending_reqs.pop(req.req_id, None)
-            if txn is not None:
-                txn.lors = lors
-                self._wait_enabled(txn, node)
+            if req.prefetch:
+                # planner prefetch: no transaction is attached; the LORs
+                # wait like a commit phase would and are drained to
+                # activeXacts=0 only once they head their queues
+                # (_settle_prefetches) — afterwards they sit unblocked and
+                # piggybackable, freed by the usual rule the moment a
+                # conflicting request blocks them
+                if lors:
+                    r.prefetch_waiters.append(lors)
+            else:
+                txn = r.pending_reqs.pop(req.req_id, None)
+                if txn is not None:
+                    txn.lors = lors
+                    self._wait_enabled(txn, node)
         self._check_waiters(node)
 
     def _on_urb(self, node: int, msg, sender: int) -> None:

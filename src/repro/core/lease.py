@@ -41,6 +41,12 @@ class LeaseRequest:
     proc: int                    # requesting replica
     ccs: Tuple[int, ...]         # conflict classes requested (sorted)
     coarse: bool = False         # True => single multi-cc LOR (ALC semantics)
+    # planner-issued background prefetch (repro.plan): no transaction is
+    # attached, so the requester drains the LORs' activeXacts immediately at
+    # TO-deliver and they sit unblocked in the queues, piggybackable by
+    # future local transactions.  Protocol-wise this is an ordinary lease
+    # request — safety and queue replication are untouched.
+    prefetch: bool = False
 
 
 @dataclass

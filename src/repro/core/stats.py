@@ -20,27 +20,68 @@ import numpy as np
 
 
 class DecayedFrequency:
-    """F[j, x] matrix of exponentially-decayed event rates."""
+    """F[j, x] matrix of exponentially-decayed event rates.
 
-    def __init__(self, n_nodes: int, n_classes: int, tau_ms: float = 200.0) -> None:
+    The single decayed-counter implementation of the repo: the simulator's
+    per-replica access frequencies, the serving router's per-session touch
+    rates, and the placement planner's affinity matrices
+    (:mod:`repro.plan.affinity`) are all instances of this class, decayed
+    against one caller-supplied clock (the event queue's ``now`` in the
+    simulator, the engine-ticked router clock in serving).
+
+    ``grow_cols=True`` lets the column space grow on demand in power-of-two
+    steps (sessions appear dynamically; conflict classes are fixed), so one
+    matrix replaces a dict of per-column trackers without recompiling
+    consumers on every new column.
+    """
+
+    def __init__(self, n_nodes: int, n_classes: int, tau_ms: float = 200.0,
+                 *, grow_cols: bool = False) -> None:
         self.tau = tau_ms
+        self.grow_cols = grow_cols
         self.counts = np.zeros((n_nodes, n_classes), dtype=np.float64)
         self.last_t = 0.0
+
+    @property
+    def n_cols(self) -> int:
+        return self.counts.shape[1]
+
+    def ensure_col(self, col: int) -> None:
+        """Grow the column space (power-of-two steps) to include ``col``."""
+        n = self.counts.shape[1]
+        if col < n:
+            return
+        if not self.grow_cols:
+            raise IndexError(f"column {col} out of range (n_cols={n})")
+        m = max(1, n)
+        while m <= col:
+            m *= 2
+        grown = np.zeros((self.counts.shape[0], m), dtype=np.float64)
+        grown[:, :n] = self.counts
+        self.counts = grown
 
     def _decay_to(self, t: float) -> None:
         if t > self.last_t:
             self.counts *= math.exp(-(t - self.last_t) / self.tau)
             self.last_t = t
 
-    def record(self, t: float, origin: int, ccs: Iterable[int]) -> None:
+    def record(self, t: float, origin: int, ccs: Iterable[int],
+               weight: float = 1.0) -> None:
         self._decay_to(t)
         for cc in ccs:
-            self.counts[origin, cc] += 1.0
+            if cc >= self.counts.shape[1]:
+                self.ensure_col(cc)
+            self.counts[origin, cc] += weight
 
     def rates(self, t: float) -> np.ndarray:
         """F(j, x) in events/ms, shape [n_nodes, n_classes]."""
         self._decay_to(t)
         return self.counts / self.tau
+
+    def zero_col(self, col: int) -> None:
+        """Forget a column (e.g. an evicted session)."""
+        if col < self.counts.shape[1]:
+            self.counts[:, col] = 0.0
 
 
 class CpuMeter:

@@ -41,6 +41,11 @@ def main(argv=None) -> dict:
     ap.add_argument("--seq-axis", type=int, default=0, metavar="N",
                     help="shard KV seq dims over an N-way seq mesh axis "
                          "(0 = off); the sim backend uses N for pricing only")
+    ap.add_argument("--plan-epoch-ms", type=float, default=0.0,
+                    help="run the proactive placement planner (repro.plan) "
+                         "every this many ms of simulated time (0 = off): "
+                         "affinity-scored lease prefetch + session re-homes "
+                         "off the critical path")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -74,7 +79,12 @@ def main(argv=None) -> dict:
                             arbitration=args.arbitration,
                             kv_bytes_per_token=kv_per_tok,
                             seq_shards=seq_shards)
-    eng = MultiPodEngine(args.pods, backend, router)
+    planner = None
+    if args.plan_epoch_ms > 0:
+        from repro.plan import PlacementPlanner
+        planner = PlacementPlanner.for_serving(
+            args.pods, args.sessions, epoch_ms=args.plan_epoch_ms)
+    eng = MultiPodEngine(args.pods, backend, router, planner=planner)
     rng = np.random.default_rng(args.seed)
     submitted = 0
     while submitted < args.requests:
@@ -94,6 +104,10 @@ def main(argv=None) -> dict:
     print(f"tokens={m['tokens']} forwards={m['forwards']} "
           f"kv_migrations={m['transfers']} wire={m['wire_GB']:.4f}GB "
           f"lease_reuse={router.metrics.lease_reuse_rate:.3f}")
+    if planner is not None:
+        print(f"planner: epochs={m['plan_epochs']} moves={m['plan_moves']} "
+              f"prefetches={m['plan_prefetches']} "
+              f"planned={m['plan_GB']:.4f}GB")
     if args.backend == "sim":
         print(f"simulated throughput: {m['tokens_per_s']:.0f} tok/s")
     return m

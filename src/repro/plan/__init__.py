@@ -1,0 +1,39 @@
+"""Proactive placement planner — self-optimizing lease circulation.
+
+Everything the repo shipped before this package is *reactive*: the DTD
+(:mod:`repro.core.dtd`) and the serving router (:mod:`repro.serve.router`)
+only move a lease when a transaction or request is already stalled on it,
+so every ownership change eats a forward/acquire round-trip on the
+critical path.  This package is the proactive counterpart — the paper's
+"self-optimizing lease circulation" run as a background control loop:
+
+* :mod:`repro.plan.affinity` watches commit/forward/abort events (the
+  simulator) or touch/forward metrics (the serving stack) and maintains a
+  decayed conflict-class ↔ node affinity matrix plus class ↔ class
+  co-access rates;
+* :mod:`repro.plan.score` scores every [class, target-node] candidate
+  move in one jit'd array evaluation — expected forward savings over a
+  horizon minus the migration cost, with DTD constraint-(3) CPU
+  feasibility masked out;
+* :mod:`repro.plan.planner` turns scores into a bounded, hysteresis-damped
+  :class:`PlacementPlan` (top-K moves per epoch, per-node byte budget, no
+  move that reverses a recent one).
+
+Consumers execute plans off the critical path: the cluster simulator as
+background lease prefetches through the existing lease manager (safety
+untouched), the serving engine as KV prefetch + session re-homes priced
+onto pod busy clocks.  Division of labor: the reactive DTD keeps settling
+per-request forward-vs-acquire; the planner owns *placement* — locality
+repair and load rebalancing — so the router no longer has to panic-acquire
+state on the critical path when a pod runs hot.
+"""
+from .affinity import AffinityTracker
+from .planner import (PlacementPlan, PlacementPlanner, PlanConfig,
+                      PlannedMove, SERVE_PLAN_DEFAULTS, SIM_PLAN_DEFAULTS)
+from .score import price_move_costs, score_moves, score_moves_np
+
+__all__ = [
+    "AffinityTracker", "PlacementPlan", "PlacementPlanner", "PlanConfig",
+    "PlannedMove", "SERVE_PLAN_DEFAULTS", "SIM_PLAN_DEFAULTS",
+    "price_move_costs", "score_moves", "score_moves_np",
+]

@@ -1,0 +1,195 @@
+"""Batched move scoring — every [class, target-node] candidate in one jit.
+
+A candidate move relocates conflict class (or session) ``c``'s lease to
+node ``n``.  Its score is the *expected forward time saved over a horizon*
+minus the *one-time migration cost*:
+
+    score[c, n] = (adv + load + co) · horizon_ms · fwd_cost[c]
+                  − margin · move_cost[c]
+
+* ``adv``  — A[c, n] − A[c, owner[c]]: the affinity-rate advantage of the
+  target over the current owner (accesses/ms that stop being forwards);
+* ``load`` — ``load_gain · max(0, cpu[owner] − cpu[n])``: proactive
+  rebalancing pressure away from hot owners;
+* ``co``   — ``co_gain ·`` co-access rate delta toward nodes owning the
+  class's co-accessed classes (multi-class footprints commit in one
+  piggyback when they land together).
+
+Infeasible candidates are masked to −inf: the no-op ``n == owner[c]``,
+unowned classes, targets violating the DTD's CPU constraint (3), targets
+below the ``min_frac`` dominance share, and classes whose total affinity
+rate is below ``min_rate`` (decayed counters are noisy; sub-dominant
+"advantages" and two-event "trends" are noise and would churn leases).
+
+The jit'd evaluation (`score_moves`) is the hot path — no per-candidate
+Python loop; `score_moves_np` is its numpy twin, kept for the parity test
+exactly like :mod:`repro.core.dtd`'s `*_np` mirrors.  Costs come from the
+same byte model the router prices with: :func:`price_move_costs` is the
+array twin of :func:`repro.dist.locality.price_session_dispatch`.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.dist.locality import DCN_BW, DCN_RTT_S
+
+NEG_INF = float("-inf")
+
+
+def price_move_costs(
+    state_bytes,
+    work_bytes,
+    *,
+    handoff_bytes: float = 512.0,
+    dcn_bw: float = DCN_BW,
+    rtt_s: float = DCN_RTT_S,
+    seq_shards: float = 1.0,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Array twin of ``price_session_dispatch``: per-class plan times.
+
+    Returns ``(fwd_cost_s, move_cost_s)`` — the per-access forward time and
+    the one-time state-migration time of every class, elementwise equal to
+    ``price_session_dispatch(...).migrate_work_s`` / ``.migrate_state_s``
+    for the same inputs (tests pin the parity).
+    """
+    seq_shards = max(1.0, float(seq_shards))
+    state_bytes = np.asarray(state_bytes, dtype=np.float64)
+    work_bytes = np.asarray(work_bytes, dtype=np.float64)
+    fwd_cost_s = rtt_s + work_bytes / dcn_bw
+    move_cost_s = rtt_s + (state_bytes / seq_shards + handoff_bytes) / dcn_bw
+    return fwd_cost_s, move_cost_s
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("horizon_ms", "margin", "min_frac", "min_rate",
+                     "load_gain", "co_gain", "max_cpu", "overload_ctrl"),
+)
+def _score_moves_jit(
+    rates: jax.Array,        # [C, N] affinity rates, events/ms
+    owner: jax.Array,        # [C] int32 current owner (-1 = unowned)
+    fwd_cost: jax.Array,     # [C] per-access forward cost (s or steps)
+    move_cost: jax.Array,    # [C] one-time migration cost (same unit)
+    cpu: jax.Array,          # [N]
+    co_adv: jax.Array,       # [C, N] co-location advantage (zeros if untracked)
+    *,
+    horizon_ms: float,
+    margin: float,
+    min_frac: float,
+    min_rate: float,
+    load_gain: float,
+    co_gain: float,
+    max_cpu: float,
+    overload_ctrl: bool,
+) -> jax.Array:
+    c, n = rates.shape
+    owned = owner >= 0
+    safe_owner = jnp.clip(owner, 0, n - 1)
+    own_rate = jnp.where(
+        owned, jnp.take_along_axis(rates, safe_owner[:, None], axis=1)[:, 0], 0.0
+    )
+    adv = rates - own_rate[:, None]
+    own_cpu = jnp.where(owned, cpu[safe_owner], 0.0)
+    load = load_gain * jnp.maximum(0.0, own_cpu[:, None] - cpu[None, :])
+    benefit = (adv + load + co_gain * co_adv) * horizon_ms * fwd_cost[:, None]
+    score = benefit - margin * move_cost[:, None]
+
+    is_owner = jnp.arange(n)[None, :] == owner[:, None]
+    total = jnp.sum(rates, axis=1, keepdims=True)
+    dominant = (rates >= min_frac * total) & (total >= min_rate)
+    mask = (~is_owner) & owned[:, None] & dominant
+    if overload_ctrl:
+        mask &= (cpu < max_cpu)[None, :]
+    return jnp.where(mask, score, NEG_INF)
+
+
+def score_moves(
+    rates: np.ndarray,
+    owner: np.ndarray,
+    fwd_cost: np.ndarray,
+    move_cost: np.ndarray,
+    cpu: np.ndarray,
+    *,
+    horizon_ms: float,
+    margin: float = 1.0,
+    min_frac: float = 0.0,
+    min_rate: float = 0.0,
+    load_gain: float = 0.0,
+    co_gain: float = 0.0,
+    co_rates: Optional[np.ndarray] = None,
+    max_cpu: float = 0.9,
+    overload_ctrl: bool = True,
+) -> np.ndarray:
+    """Score all [class, target] moves in ONE jit'd evaluation."""
+    c, n = np.asarray(rates).shape
+    owner = np.asarray(owner, dtype=np.int32)
+    if co_rates is not None and co_gain != 0.0:
+        # co-location advantage: co-access mass owned at the target minus at
+        # the current owner — one matmul, still a single fused evaluation
+        onehot = (owner[:, None] == np.arange(n)[None, :]).astype(np.float64)
+        m = np.asarray(co_rates, dtype=np.float64) @ onehot          # [C, N]
+        at_owner = np.where(owner >= 0,
+                            np.take_along_axis(
+                                m, np.clip(owner, 0, n - 1)[:, None], axis=1)[:, 0],
+                            0.0)
+        co_adv = m - at_owner[:, None]
+    else:
+        co_adv = np.zeros((c, n), dtype=np.float64)
+    out = _score_moves_jit(
+        jnp.asarray(rates, jnp.float32), jnp.asarray(owner),
+        jnp.asarray(fwd_cost, jnp.float32), jnp.asarray(move_cost, jnp.float32),
+        jnp.asarray(cpu, jnp.float32), jnp.asarray(co_adv, jnp.float32),
+        horizon_ms=float(horizon_ms), margin=float(margin),
+        min_frac=float(min_frac), min_rate=float(min_rate),
+        load_gain=float(load_gain),
+        co_gain=float(co_gain), max_cpu=float(max_cpu),
+        overload_ctrl=bool(overload_ctrl))
+    return np.asarray(out)
+
+
+def score_moves_np(
+    rates, owner, fwd_cost, move_cost, cpu, *,
+    horizon_ms, margin=1.0, min_frac=0.0, min_rate=0.0, load_gain=0.0,
+    co_gain=0.0, co_rates=None, max_cpu=0.9, overload_ctrl=True,
+) -> np.ndarray:
+    """Numpy twin of :func:`score_moves` (test oracle, float32 like the jit)."""
+    rates = np.asarray(rates, dtype=np.float32)
+    owner = np.asarray(owner, dtype=np.int32)
+    fwd_cost = np.asarray(fwd_cost, dtype=np.float32)
+    move_cost = np.asarray(move_cost, dtype=np.float32)
+    cpu = np.asarray(cpu, dtype=np.float32)
+    c, n = rates.shape
+    owned = owner >= 0
+    safe = np.clip(owner, 0, n - 1)
+    own_rate = np.where(
+        owned, np.take_along_axis(rates, safe[:, None], axis=1)[:, 0], 0.0
+    ).astype(np.float32)
+    adv = rates - own_rate[:, None]
+    own_cpu = np.where(owned, cpu[safe], 0.0).astype(np.float32)
+    load = np.float32(load_gain) * np.maximum(
+        np.float32(0.0), own_cpu[:, None] - cpu[None, :])
+    if co_rates is not None and co_gain != 0.0:
+        onehot = (owner[:, None] == np.arange(n)[None, :]).astype(np.float64)
+        m = np.asarray(co_rates, dtype=np.float64) @ onehot
+        at_owner = np.where(owned,
+                            np.take_along_axis(m, safe[:, None], axis=1)[:, 0],
+                            0.0)
+        co_adv = (m - at_owner[:, None]).astype(np.float32)
+    else:
+        co_adv = np.zeros((c, n), dtype=np.float32)
+    benefit = (adv + load + np.float32(co_gain) * co_adv) \
+        * np.float32(horizon_ms) * fwd_cost[:, None]
+    score = benefit - np.float32(margin) * move_cost[:, None]
+    is_owner = np.arange(n)[None, :] == owner[:, None]
+    total = rates.sum(axis=1, keepdims=True)
+    dominant = (rates >= np.float32(min_frac) * total) \
+        & (total >= np.float32(min_rate))
+    mask = (~is_owner) & owned[:, None] & dominant
+    if overload_ctrl:
+        mask &= (cpu < max_cpu)[None, :]
+    return np.where(mask, score, NEG_INF).astype(np.float32)

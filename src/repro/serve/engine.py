@@ -14,6 +14,15 @@ pod certifies its forwarded batch in one :mod:`repro.serve.certifier`
 validate dispatch (stale lease epochs re-route), (4) each pod runs one
 batched decode over its active sessions, (5) queue depths feed back as
 the CPU_i statistic.
+
+With a :class:`repro.plan.PlacementPlanner` attached, a sixth phase runs
+every ``plan.epoch_ms`` of simulated time: the planner scores all
+[session, pod] moves in one jit'd evaluation over the router's touch
+affinity and executes the bounded plan *between* steps — zero-byte lease
+prefetches for cacheless sessions, KV re-homes for misplaced ones — with
+wire time priced onto the pod busy clocks exactly like reactive moves.
+The router's constraint-(3) panic-acquire is disabled in this mode
+(rebalancing is the planner's job; see ``LocalityRouter.planned``).
 """
 from __future__ import annotations
 
@@ -160,6 +169,10 @@ class EngineMetrics:
     transfers: int = 0
     forwards: int = 0
     local: int = 0
+    plan_epochs: int = 0         # planner invocations
+    plan_moves: int = 0          # planned session re-homes executed
+    plan_prefetches: int = 0     # planned zero-byte lease prefetches
+    plan_bytes: float = 0.0      # state shipped by planned moves
     # certification counters live in the StepCertifier (single source of
     # truth); as_dict merges them when the engine links it here
     cert: Optional[object] = None
@@ -172,6 +185,9 @@ class EngineMetrics:
             "wire_GB": self.wire_bytes / 1e9,
             "transfers": self.transfers, "forwards": self.forwards,
             "local": self.local,
+            "plan_epochs": self.plan_epochs, "plan_moves": self.plan_moves,
+            "plan_prefetches": self.plan_prefetches,
+            "plan_GB": self.plan_bytes / 1e9,
         }
         if self.cert is not None:
             out.update(self.cert.as_dict())
@@ -180,13 +196,21 @@ class EngineMetrics:
 
 class MultiPodEngine:
     def __init__(self, n_pods: int, backend, router: LocalityRouter,
-                 certifier: Optional[StepCertifier] = None) -> None:
+                 certifier: Optional[StepCertifier] = None,
+                 planner=None) -> None:
         self.n_pods = n_pods
         self.backend = backend
         self.router = router
         # forwarded requests are certified at the owning pod in one batch
         # per engine step (the paper's commit phase at the lease owner)
         self.certifier = certifier or StepCertifier(n_pods)
+        # optional proactive placement planner (repro.plan): shares the
+        # router's clock/stats implementation and takes over rebalancing
+        self.planner = planner
+        self._plan_clock_ms = 0.0
+        if planner is not None:
+            router.planned = True
+            router.affinity = planner.affinity
         self.queues: List[List[Request]] = [[] for _ in range(n_pods)]
         self.session_len: Dict[int, int] = {}
         self.session_home: Dict[int, int] = {}
@@ -207,28 +231,19 @@ class MultiPodEngine:
         if dec.action == "acquire":
             src = self.session_home.get(req.sid, dec.target)
             if src != dec.target:
-                if hasattr(self.backend, "transfer"):
-                    shipped = self.backend.transfer(src, dec.target, req.sid)
-                    if shipped > dec.wire_bytes:
-                        # the real cache column outweighed the router's
-                        # estimate: re-price the state move with actual bytes
-                        # (seq-sharded columns move in parallel shard hops)
-                        repriced = price_session_dispatch(
-                            0.0, 0.0, shipped, handoff_bytes=0.0,
-                            seq_shards=getattr(self.backend, "seq_shards", 1))
-                        dec = dataclasses.replace(
-                            dec, wire_bytes=shipped,
-                            wire_s=repriced.migrate_state_s)
-                else:
-                    self.backend.drop(src, req.sid)
-                # the lease move carries the conflict class's pending work
-                # with it (paper §2): re-home queued requests for this
-                # session so the old owner never decodes a departed cache
-                moved = [r for r in self.queues[src] if r.sid == req.sid]
-                if moved:
-                    self.queues[src] = [
-                        r for r in self.queues[src] if r.sid != req.sid]
-                    self.queues[dec.target].extend(moved)
+                shipped = self._move_session_state(
+                    req.sid, src, dec.target, length)
+                if hasattr(self.backend, "transfer") \
+                        and shipped > dec.wire_bytes:
+                    # the real cache column outweighed the router's
+                    # estimate: re-price the state move with actual bytes
+                    # (seq-sharded columns move in parallel shard hops)
+                    repriced = price_session_dispatch(
+                        0.0, 0.0, shipped, handoff_bytes=0.0,
+                        seq_shards=getattr(self.backend, "seq_shards", 1))
+                    dec = dataclasses.replace(
+                        dec, wire_bytes=shipped,
+                        wire_s=repriced.migrate_state_s)
                 m.transfers += 1
         elif dec.action == "forward":
             m.forwards += 1
@@ -255,6 +270,27 @@ class MultiPodEngine:
             if 0 <= src < self.n_pods and src != dec.target:
                 self._pending_wire[src].append((0.0, serial_s))
         return dec
+
+    def _move_session_state(self, sid: int, src: int, dst: int,
+                            length: int) -> float:
+        """Physically relocate a session between pods — cache column plus
+        its queued work (the lease carries the class's pending
+        transactions with it, paper §2) — and return the bytes shipped
+        (the router's estimate for drop-based backends).  Shared by the
+        reactive acquire path and the planner's re-homes, so the two can
+        never drift."""
+        if hasattr(self.backend, "transfer"):
+            shipped = self.backend.transfer(src, dst, sid)
+        else:
+            self.backend.drop(src, sid)
+            shipped = length * self.router.kv_bytes_per_token
+        self.backend.ensure(dst, sid, length)
+        self.session_home[sid] = dst
+        moved = [r for r in self.queues[src] if r.sid == sid]
+        if moved:
+            self.queues[src] = [r for r in self.queues[src] if r.sid != sid]
+            self.queues[dst].extend(moved)
+        return shipped
 
     def _wire_time_s(self, pod: int) -> float:
         """Settle the pod's transfers since its last step.
@@ -287,6 +323,11 @@ class MultiPodEngine:
                 # the session was acquired away while the forward was in
                 # flight: certification rejected the stale lease epoch —
                 # re-route against the current ownership ledger
+                if self.router.affinity is not None:
+                    # cert aborts damp the pod's affinity: sessions whose
+                    # forwards keep dying here are contended, not attracted
+                    self.router.affinity.record_abort(
+                        self.router._now, pod, (r.sid,))
                 self.submit(r)
             reqs = self.queues[pod]
             if reqs:
@@ -314,7 +355,8 @@ class MultiPodEngine:
         # pods run in parallel with no cross-pod barrier: simulated wall
         # time is the busiest pod's accumulated clock
         m.sim_time_s = float(np.max(self._pod_clock))
-        self.router.tick(1000.0 * step_t if step_t > 0 else REAL_STEP_MS)
+        dt_ms = 1000.0 * step_t if step_t > 0 else REAL_STEP_MS
+        self.router.tick(dt_ms)
         m.steps += 1
         # queue depth -> CPU_i statistic for constraint (3): backlog relative
         # to the fleet mean, so the valve trips on genuine stragglers (~2x
@@ -322,6 +364,72 @@ class MultiPodEngine:
         depths = np.asarray([float(len(q)) for q in self.queues])
         cap = max(8.0, 2.0 * float(depths.mean()))
         self.router.observe_cpu(depths / cap)
+        if self.planner is not None:
+            self._plan_clock_ms += dt_ms
+            if self._plan_clock_ms >= self.planner.cfg.epoch_ms:
+                self._plan_clock_ms = 0.0
+                self._run_plan_epoch()
+
+    # -- proactive placement (repro.plan) -----------------------------------
+    def _run_plan_epoch(self) -> None:
+        """Score all [session, pod] moves in one jit'd evaluation and
+        execute the bounded plan between steps (off the critical path)."""
+        from repro.plan.score import price_move_costs
+
+        r = self.router
+        self.metrics.plan_epochs += 1
+        n_cls = r.affinity.node.n_cols
+        owner = np.full((n_cls,), -1, dtype=np.int32)
+        state = np.zeros((n_cls,), dtype=np.float64)
+        for sid, pod in r.owner.items():
+            if sid < n_cls:
+                owner[sid] = pod
+                state[sid] = self.session_len.get(sid, 0) * r.kv_bytes_per_token
+        work = np.full((n_cls,), r.request_bytes + r.response_bytes)
+        fwd_cost, move_cost = price_move_costs(
+            state, work, seq_shards=r.seq_shards)
+        plan = self.planner.plan(r._now, owner, state, fwd_cost, move_cost,
+                                 r.cpu)
+        executed = []
+        for mv in plan.moves:
+            if r.owner.get(mv.cc) == mv.src and mv.src != mv.dst:
+                self._execute_move(mv.cc, mv.dst)
+                executed.append(mv)
+        self.planner.committed(executed)
+
+    def _execute_move(self, sid: int, dst: int) -> None:
+        """Planned lease prefetch / session re-home.
+
+        Ownership and epoch semantics are identical to a reactive acquire
+        (in-flight forwards against the old owner abort and re-route); the
+        difference is *when*: between steps, with the state's wire time
+        priced onto the endpoint pods' busy clocks instead of stalling a
+        request."""
+        r, m = self.router, self.metrics
+        src = self.session_home.get(sid, r.owner[sid])
+        epoch = r.apply_move(sid, dst)
+        self.certifier.bump(sid, epoch)
+        length = self.session_len.get(sid, 0)
+        shipped = self._move_session_state(sid, src, dst, length) \
+            if src != dst else 0.0
+        if shipped > 0:
+            m.plan_moves += 1
+            m.transfers += 1
+            m.wire_bytes += shipped
+            m.plan_bytes += shipped
+            priced = price_session_dispatch(
+                0.0, 0.0, shipped, handoff_bytes=0.0,
+                seq_shards=getattr(self.backend, "seq_shards", r.seq_shards))
+            # off the critical path: nobody awaits this transfer, so its
+            # RTT overlaps decode — only the byte serialization occupies
+            # the endpoint NICs (contrast submit(), where the acquiring
+            # pod waits out the RTT before it may decode the session)
+            serial = max(0.0, priced.migrate_state_s - DCN_RTT_S)
+            self._pending_wire[dst].append((0.0, serial))
+            if 0 <= src < self.n_pods and src != dst:
+                self._pending_wire[src].append((0.0, serial))
+        else:
+            m.plan_prefetches += 1
 
     def drain(self, max_steps: int = 10_000) -> None:
         steps = 0

@@ -33,9 +33,19 @@ The router maintains the fine-grained ownership ledger with per-session
 *lease stickiness*: ownership only moves when the DTD decides the state
 should travel, so repeated requests on a session are certified locally —
 the serving analogue of FGL lease reuse.  Per-session access frequencies
-(the LC inputs) are :class:`repro.core.stats.DecayedFrequency` counters
-decayed on the router clock — the engine advances it via :meth:`tick` with
-simulated step time, so the attractor is rate-based, not per-touch.
+(the LC inputs) live in ONE growable
+:class:`repro.core.stats.DecayedFrequency` matrix ([pod, sid]) decayed on
+the router clock — the engine advances it via :meth:`tick` with simulated
+step time, so the attractor is rate-based, not per-touch.  The placement
+planner's affinity tracker (:mod:`repro.plan.affinity`) is the same
+implementation on the same clock; attach one via :attr:`affinity` and the
+router feeds it touch/forward events as they happen.
+
+When a planner drives placement (:attr:`planned` set by the engine),
+constraint-(3) overload no longer flips the arbitration verdict onto the
+byte-heavy plan: panic-acquiring a grown KV cache on the critical path is
+exactly the reactive churn the proactive planner replaces — rebalancing
+becomes the planner's job, off the critical path and byte-budgeted.
 """
 from __future__ import annotations
 
@@ -72,6 +82,7 @@ class RouterMetrics:
     acquires: int = 0
     wire_bytes: float = 0.0
     flips: int = 0               # byte model overrode the step-constant verdict
+    planned_moves: int = 0       # ownership moves applied by the planner
 
     @property
     def lease_reuse_rate(self) -> float:
@@ -101,7 +112,13 @@ class LocalityRouter:
         self.owner: Dict[int, int] = {}          # session -> owning pod
         self.lease_epoch: Dict[int, int] = {}    # session -> ownership epoch
         self.freq_tau_ms = freq_tau_ms
-        self._freq_by_sid: Dict[int, DecayedFrequency] = {}
+        # per-session touch rates, one growable [pod, sid] matrix on the
+        # router clock (shared implementation with the planner's affinity)
+        self.freq = DecayedFrequency(n_pods, 64, tau_ms=freq_tau_ms,
+                                     grow_cols=True)
+        # optional planner hookups (set by the engine when a planner runs)
+        self.affinity = None         # repro.plan.affinity.AffinityTracker
+        self.planned = False         # rebalancing delegated to the planner
         self.cpu = np.zeros((n_pods,), np.float64)
         self.kv_bytes_per_token = kv_bytes_per_token
         self.request_bytes = request_bytes
@@ -123,11 +140,9 @@ class LocalityRouter:
         self._now += dt_ms
 
     def _touch(self, origin: int, sid: int) -> None:
-        f = self._freq_by_sid.get(sid)
-        if f is None:
-            f = self._freq_by_sid[sid] = DecayedFrequency(
-                self.n_pods, 1, tau_ms=self.freq_tau_ms)
-        f.record(self._now, origin, (0,))
+        self.freq.record(self._now, origin, (sid,))
+        if self.affinity is not None:
+            self.affinity.record_touch(self._now, origin, (sid,))
 
     # -- the decision ----------------------------------------------------------
     def route(self, origin: int, sid: int, session_len: int) -> RouteDecision:
@@ -175,6 +190,8 @@ class LocalityRouter:
             # migrate the work to the state owner
             m.forwards += 1
             m.wire_bytes += costs.work_bytes
+            if self.affinity is not None:
+                self.affinity.record_forward(self._now, origin, (sid,))
             return RouteDecision(owner, "forward", costs.work_bytes,
                                  costs.migrate_work_s, epoch=epoch)
         # migrate the state to the target (lease + KV move): the epoch bump
@@ -199,6 +216,16 @@ class LocalityRouter:
         """
         if self.arbitration == "hybrid" and target not in (origin, owner):
             return action, target    # DTD redirect (valve / attractor) stands
+        if self.planned:
+            # planner mode: the byte verdict stands unconditionally — the
+            # constraint-(3) escape hatch (acquire a grown cache because the
+            # owner runs hot) is the reactive churn the planner replaces
+            # with budgeted, off-critical-path rebalancing
+            byte_action = ("forward", owner) if costs.prefer_migration \
+                else ("acquire", origin)
+            if byte_action[0] != action:
+                self.metrics.flips += 1
+            return byte_action
         fwd_ok = self.dtd.feasible(self.cpu, owner)
         acq_ok = self.dtd.feasible(self.cpu, origin)
         if costs.prefer_migration:
@@ -212,10 +239,9 @@ class LocalityRouter:
         return byte_action
 
     def _dtd_target(self, origin: int, sid: int, owner: int) -> int:
-        f = self._freq_by_sid.get(sid)
         freq = np.zeros((self.n_pods, 1), np.float64)
-        if f is not None:
-            freq[:, 0] = f.rates(self._now)[:, 0]
+        if sid < self.freq.n_cols:
+            freq[:, 0] = self.freq.rates(self._now)[:, sid]
         return self.dtd.decide(
             origin=origin,
             ccs=frozenset({0}),
@@ -225,8 +251,21 @@ class LocalityRouter:
             opt_hint=owner if owner >= 0 else origin,
         )
 
+    def apply_move(self, sid: int, dst: int) -> int:
+        """Apply a planner move to the ownership ledger; returns the new
+        lease epoch.  Epoch semantics are identical to a reactive acquire:
+        every ownership transition bumps, so forwards routed against the
+        old owner fail certification and re-route."""
+        self.owner[sid] = dst
+        epoch = self.lease_epoch.get(sid, 0) + 1
+        self.lease_epoch[sid] = epoch
+        self.metrics.planned_moves += 1
+        return epoch
+
     def evict(self, sid: int) -> None:
         self.owner.pop(sid, None)
         # lease_epoch survives eviction on purpose: a recycled sid keeps
         # counting up, so stale in-flight forwards can never alias epoch 0
-        self._freq_by_sid.pop(sid, None)
+        self.freq.zero_col(sid)
+        if self.affinity is not None:
+            self.affinity.forget(sid)

@@ -35,10 +35,12 @@ def _run_mode(mode, *, algo="LILAC-TM-ST", locality=0.5, seed=3, **cfg_kw):
 def test_batched_certification_byte_identical_to_sequential(algo, locality):
     """Seeded runs: batched drain (forced through the vectorized kernel,
     certify_jax_min=1) produces byte-identical per-replica values/versions
-    arrays and identical commit/abort/forward counts."""
+    arrays and identical commit/abort/forward counts.  The amortized slot
+    cost is pinned off: with ``cert_slot_mode="per_txn"`` the batched drain
+    is a *pure vectorization* of the one-at-a-time path."""
     seq_c, seq_m = _run_mode("sequential", algo=algo, locality=locality)
     bat_c, bat_m = _run_mode("batched", algo=algo, locality=locality,
-                             certify_jax_min=1)
+                             certify_jax_min=1, cert_slot_mode="per_txn")
     assert (bat_m.commits, bat_m.aborts, bat_m.forwards) == \
         (seq_m.commits, seq_m.aborts, seq_m.forwards)
     assert bat_m.commit_times == seq_m.commit_times
@@ -48,6 +50,54 @@ def test_batched_certification_byte_identical_to_sequential(algo, locality):
     # the batched path actually ran: every certification went through it
     assert bat_m.cert_batches > 0
     assert bat_m.cert_batch_txns >= bat_m.rw_certified - bat_m.forwards
+
+
+def test_amortized_slot_cost_keeps_invariants_and_lifts_throughput():
+    """ROADMAP item: with the amortized slot model (the batched-mode
+    default), the commit-phase group charges ONE slot fixed + per-txn
+    increment, so *simulated* throughput reflects PR 4's batching — it must
+    be at least the per-txn model's, and safety must be untouched."""
+    assert SimConfig().cert_slot_mode == "amortized"
+    thr = {}
+    for mode in ("per_txn", "amortized"):
+        c, m = _run_mode("batched", locality=0.3, cert_slot_mode=mode)
+        assert m.commits > 100
+        expect = c.cfg.n_items * c.cfg.init_value
+        for r in c.replicas:
+            assert r.store.total() == pytest.approx(expect, abs=1e-6)
+        v0 = c.replicas[0].store.values
+        for r in c.replicas[1:]:
+            np.testing.assert_array_equal(v0, r.store.values)
+        thr[mode] = c.throughput()
+    assert thr["amortized"] >= thr["per_txn"]
+
+
+def test_amortized_slot_charges_fixed_plus_increment_per_group():
+    """Two transactions enabled together occupy one slot for
+    fixed + 2*per_txn (not two slots for the full cost each)."""
+    from repro.core.cluster import Cluster, Replica
+
+    cfg = SimConfig(certify_mode="batched", cert_slot_mode="amortized",
+                    cert_fixed_ms=1.0, cert_per_txn_ms=0.25)
+    wl = BankWorkload(n_nodes=cfg.n_nodes, n_items=cfg.n_items)
+    c = make_cluster("FGL", wl, cfg)
+
+    class _Txn:
+        def __init__(self):
+            self.lors = []
+    r = c.replicas[0]
+    t1, t2 = _Txn(), _Txn()
+    r.lm.is_enabled = lambda lors: True
+    drained = []
+    c._enqueue_certify = lambda t, node: drained.append(t)
+    r.waiters = [(t1, []), (t2, [])]
+    c._check_waiters(0)
+    assert r.free_slots == cfg.threads_per_node - 1   # ONE slot for the group
+    c.events.run(until=1.49)                          # fixed + 2*inc = 1.5
+    assert drained == []
+    c.events.run(until=2.0)
+    assert drained == [t1, t2]
+    assert r.free_slots == cfg.threads_per_node
 
 
 def test_batched_is_the_default_and_window_keeps_invariants():

@@ -1,0 +1,431 @@
+"""repro.plan: scoring parity, plan invariants, sim + serving integration.
+
+The contract under test (ISSUE 5): move scoring is ONE jit'd array
+evaluation whose numpy twin agrees bitwise-modulo-float32, plans respect
+the DTD CPU constraint and their move/byte budgets, the simulator's
+planner lowers forwards on a shifted high-locality workload without
+touching STM safety, and the serving engine executes plans as
+off-critical-path prefetch/re-homes with correct lease-epoch semantics.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import BankWorkload, SimConfig, make_cluster
+from repro.dist.locality import price_session_dispatch
+from repro.plan import (AffinityTracker, PlacementPlanner, PlanConfig,
+                        SIM_PLAN_DEFAULTS, price_move_costs, score_moves,
+                        score_moves_np)
+
+
+# ---------------------------------------------------------------------------
+# Scoring: jit kernel == numpy twin, pricing == the router's byte model
+# ---------------------------------------------------------------------------
+
+def _rand_inputs(seed, c=24, n=6):
+    rng = np.random.default_rng(seed)
+    rates = rng.random((c, n)) * rng.choice([0.0, 0.02], (c, 1))
+    owner = rng.integers(-1, n, c).astype(np.int32)
+    fwd = rng.random(c) * 2e-3
+    mv = rng.random(c) * 3e-3
+    cpu = rng.random(n) * 1.2
+    co = rng.random((c, c)) * 0.01
+    return rates, owner, fwd, mv, cpu, co
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+@pytest.mark.parametrize("co_gain", [0.0, 0.3])
+def test_score_moves_jit_matches_numpy_twin(seed, co_gain):
+    rates, owner, fwd, mv, cpu, co = _rand_inputs(seed)
+    kw = dict(horizon_ms=400.0, margin=2.5, min_frac=0.3, min_rate=1e-3,
+              load_gain=0.05, co_gain=co_gain, co_rates=co, max_cpu=0.9)
+    a = score_moves(rates, owner, fwd, mv, cpu, **kw)
+    b = score_moves_np(rates, owner, fwd, mv, cpu, **kw)
+    np.testing.assert_array_equal(np.isneginf(a), np.isneginf(b))
+    fin = np.isfinite(a)
+    np.testing.assert_allclose(a[fin], b[fin], rtol=1e-5, atol=1e-7)
+
+
+def test_score_masks_owner_unowned_overload_and_noise():
+    rates = np.array([[0.01, 0.02], [0.0, 0.03], [0.01, 0.0],
+                      [1e-9, 2e-9]])
+    owner = np.array([0, -1, 0, 0], np.int32)
+    fwd = np.full(4, 1e-3)
+    mv = np.zeros(4)
+    cpu = np.array([0.0, 0.95])
+    s = score_moves(rates, owner, fwd, mv, cpu, horizon_ms=100.0,
+                    min_rate=1e-6, max_cpu=0.9)
+    assert np.isneginf(s[:, 0]).all()      # own column masked
+    assert np.isneginf(s[1]).all()         # unowned class masked
+    assert np.isneginf(s[:, 1]).all()      # overloaded target masked (3)
+    s2 = score_moves(rates, owner, fwd, mv, np.zeros(2), horizon_ms=100.0,
+                     min_rate=1e-6, max_cpu=0.9)
+    assert np.isfinite(s2[0, 1])           # feasible target scores
+    assert np.isneginf(s2[3, 1])           # sub-min_rate evidence masked
+
+
+def test_price_move_costs_matches_price_session_dispatch():
+    state = np.array([0.0, 5e5, 2.6e6, 1e9])
+    work = np.full(4, 5120.0)
+    for shards in (1, 4):
+        f, m = price_move_costs(state, work, seq_shards=shards)
+        for i in range(len(state)):
+            ref = price_session_dispatch(work[i], 0.0, state[i],
+                                         wire_bytes_per_token=1.0,
+                                         seq_shards=shards)
+            assert f[i] == pytest.approx(ref.migrate_work_s)
+            assert m[i] == pytest.approx(ref.migrate_state_s)
+
+
+# ---------------------------------------------------------------------------
+# Plan invariants (property tests)
+# ---------------------------------------------------------------------------
+
+def _planner_with_counts(counts, cfg):
+    n_nodes, n_classes = counts.shape
+    p = PlacementPlanner(n_nodes, n_classes, cfg)
+    p.affinity.node.counts[:] = counts
+    return p
+
+
+@pytest.mark.parametrize("seed", range(20))
+def test_plan_respects_budgets_and_cpu_feasibility(seed):
+    """A PlacementPlan NEVER targets a CPU-infeasible node, never exceeds
+    top_k moves, never exceeds the per-node inbound byte budget, and never
+    plans a no-op (dst == src)."""
+    rng = np.random.default_rng(seed)
+    n, c = int(rng.integers(2, 8)), int(rng.integers(1, 40))
+    counts = rng.random((n, c)) * rng.choice([0.0, 30.0], (1, c))
+    cfg = PlanConfig(
+        top_k=int(rng.integers(1, 6)),
+        node_budget_bytes=float(rng.choice([5e5, 2e6, np.inf])),
+        margin=float(rng.random() * 2), min_frac=float(rng.random() * 0.6),
+        min_events=float(rng.choice([0.0, 4.0])),
+        load_gain=float(rng.choice([0.0, 0.05])))
+    p = _planner_with_counts(counts, cfg)
+    owner = rng.integers(-1, n, c).astype(np.int32)
+    state = rng.random(c) * 2e6
+    fwd, mv = price_move_costs(state, np.full(c, 5120.0))
+    cpu = rng.random(n) * 1.2
+    plan = p.plan(0.0, owner, state, fwd, mv, cpu)
+
+    assert len(plan.moves) <= cfg.top_k
+    spent = np.zeros(n)
+    for m in plan.moves:
+        assert cpu[m.dst] < cfg.max_cpu          # constraint (3)
+        assert m.src == owner[m.cc] and m.dst != m.src
+        spent[m.dst] += m.state_bytes
+    assert (spent <= cfg.node_budget_bytes + 1e-9).all()
+
+
+def test_plan_hysteresis_blocks_reversals():
+    """A move that reverses one *executed* (reported via committed())
+    within the last W epochs is rejected; after W epochs it is admitted
+    again.  Unexecuted plans leave no phantom history."""
+    n, c = 2, 1
+    cfg = PlanConfig(top_k=4, hysteresis_epochs=3, margin=0.0, min_frac=0.0,
+                     min_events=0.0, node_budget_bytes=np.inf)
+    p = PlacementPlanner(n, c, cfg)
+    state = np.zeros(c)
+    fwd = np.full(c, 1e-3)
+    mv = np.zeros(c)
+    cpu = np.zeros(n)
+
+    # epoch 1: class 0 is hot at node 1, owned by node 0 -> move 0 -> 1
+    p.affinity.node.counts[:] = [[0.0], [50.0]]
+    plan = p.plan(0.0, np.array([0]), state, fwd, mv, cpu)
+    assert [(m.cc, m.src, m.dst) for m in plan.moves] == [(0, 0, 1)]
+    p.committed(plan.moves)
+    assert p.planned_moves == 1
+    # flip the affinity: node 0 now dominates — the reversal (-> 0) must be
+    # blocked for W epochs even though it scores best
+    p.affinity.node.counts[:] = [[50.0], [0.0]]
+    for _ in range(cfg.hysteresis_epochs - 1):
+        plan = p.plan(0.0, np.array([1]), state, fwd, mv, cpu)
+        assert not plan.moves
+    plan = p.plan(0.0, np.array([1]), state, fwd, mv, cpu)
+    assert [(m.cc, m.src, m.dst) for m in plan.moves] == [(0, 1, 0)]
+
+
+def test_plan_unexecuted_moves_leave_no_phantom_hysteresis():
+    """A planned move the executor skipped (dead node, stale ownership)
+    must not block the class's real move as a 'reversal'."""
+    cfg = PlanConfig(top_k=4, hysteresis_epochs=5, margin=0.0, min_frac=0.0,
+                     min_events=0.0, node_budget_bytes=np.inf)
+    p = PlacementPlanner(2, 1, cfg)
+    p.affinity.node.counts[:] = [[0.0], [50.0]]
+    args = (np.zeros(1), np.full(1, 1e-3), np.zeros(1), np.zeros(2))
+    plan = p.plan(0.0, np.array([0]), *args)
+    assert plan.moves                      # planned 0 -> 1, NOT committed
+    assert p.planned_moves == 0
+    p.affinity.node.counts[:] = [[50.0], [0.0]]
+    plan = p.plan(0.0, np.array([1]), *args)
+    assert [(m.cc, m.src, m.dst) for m in plan.moves] == [(0, 1, 0)]
+
+
+def test_planner_idle_without_evidence():
+    """min_events keeps the planner from acting on two-touch noise."""
+    p = PlacementPlanner(4, 8, PlanConfig(min_events=6.0, min_frac=0.5))
+    p.affinity.record_touch(0.0, 2, (3,))
+    p.affinity.record_touch(1.0, 2, (3,))
+    owner = np.zeros(8, np.int32)
+    state = np.zeros(8)
+    fwd, mv = price_move_costs(state, np.full(8, 5120.0))
+    plan = p.plan(2.0, owner, state, fwd, mv, np.zeros(4))
+    assert not plan.moves and plan.n_candidates == 0
+
+
+# ---------------------------------------------------------------------------
+# Affinity tracker
+# ---------------------------------------------------------------------------
+
+def test_affinity_forward_weight_and_abort_damping():
+    a = AffinityTracker(2, 4, tau_ms=100.0, forward_weight=2.0,
+                        abort_weight=1.0)
+    a.record_commit(0.0, 0, (1,))
+    a.record_forward(0.0, 0, (1,))
+    r = a.rates(0.0)
+    assert r[1, 0] == pytest.approx(3.0 / 100.0)     # 1 + weighted 2
+    a.record_abort(0.0, 0, (1,))
+    assert a.rates(0.0)[1, 0] == pytest.approx(2.0 / 100.0)
+    # damping clips at zero, never repulsive
+    for _ in range(5):
+        a.record_abort(0.0, 0, (1,))
+    assert a.rates(0.0)[1, 0] == 0.0
+
+
+def test_affinity_co_access_and_forget():
+    a = AffinityTracker(2, 4, tau_ms=100.0, track_co=True)
+    a.record_commit(0.0, 0, (1, 2))
+    co = a.co_rates(0.0, 4)
+    assert co[1, 2] > 0 and co[2, 1] > 0 and co[1, 1] == 0
+    a.forget(1)
+    co = a.co_rates(0.0, 4)
+    assert co[1, 2] == 0 and co[2, 1] == 0
+    assert a.rates(0.0)[1].sum() == 0
+
+
+def test_shared_decayed_frequency_grows_and_zeroes():
+    from repro.core.stats import DecayedFrequency
+
+    f = DecayedFrequency(2, 2, tau_ms=50.0, grow_cols=True)
+    f.record(0.0, 1, (9,))                 # auto-grow past col 2
+    assert f.n_cols == 16 and f.rates(0.0)[1, 9] > 0
+    f.zero_col(9)
+    assert f.rates(0.0)[1, 9] == 0.0
+    fixed = DecayedFrequency(2, 2)
+    with pytest.raises(IndexError):
+        fixed.ensure_col(5)
+
+
+# ---------------------------------------------------------------------------
+# Simulator regression: the shifted high-locality workload
+# ---------------------------------------------------------------------------
+
+class RotatingBank(BankWorkload):
+    """Bank whose node→partition affinity rotates mid-run (phase shift):
+    after the shift every node's dominant partition is its neighbour's, so
+    the reactive stack forwards its local transactions forever while the
+    planner re-circulates the leases to the new dominant accessors."""
+
+    rotation: int = 0
+
+    def _choose_partition(self, node, rng):
+        home = (node + self.rotation) % self.n_nodes
+        if rng.random() < self.locality:
+            return home
+        others = [p for p in range(self.n_nodes) if p != home]
+        return int(others[rng.integers(len(others))])
+
+
+def _run_shifted(plan, seed=0):
+    cfg = SimConfig(duration_ms=1000.0, warmup_ms=100.0, seed=seed,
+                    n_classes=64, plan=plan)
+    wl = RotatingBank(n_nodes=cfg.n_nodes, n_items=cfg.n_items, locality=0.9)
+    c = make_cluster("LILAC-TM-ST", wl, cfg)
+    marks = {}
+
+    def shift():
+        wl.rotation = 1
+        marks["fw"] = c.metrics.forwards
+        marks["commits"] = c.metrics.commits
+
+    c.events.schedule(300.0, shift)
+    m = c.run()
+    return c, m, m.forwards - marks["fw"], m.commits - marks["commits"]
+
+
+def test_sim_planner_preserves_safety_and_lowers_forwards():
+    """Seeded planner run: STM safety invariants hold (money conserved, no
+    commit of a conflicting pair — replicated stores stay byte-identical)
+    and the post-shift forward count is strictly below the reactive run."""
+    base_c, base_m, base_fw, base_commits = _run_shifted(None)
+    plan_c, plan_m, plan_fw, plan_commits = _run_shifted(SIM_PLAN_DEFAULTS)
+
+    for c in (base_c, plan_c):
+        expect = c.cfg.n_items * c.cfg.init_value
+        for r in c.replicas:
+            assert r.store.total() == pytest.approx(expect, abs=1e-6)
+        v0 = c.replicas[0].store.values
+        ver0 = c.replicas[0].store.versions
+        for r in c.replicas[1:]:
+            np.testing.assert_array_equal(v0, r.store.values)
+            np.testing.assert_array_equal(ver0, r.store.versions)
+
+    assert plan_m.plan_prefetches > 0
+    assert plan_fw < base_fw                       # strictly fewer forwards
+    assert plan_commits >= base_commits            # and no throughput loss
+    # the fix is structural, not marginal: post-shift forward *rate* halves
+    assert plan_fw / max(1, plan_commits) < 0.5 * base_fw / max(1, base_commits)
+
+
+def test_sim_prefetch_behind_active_owner_cannot_wedge_the_class():
+    """Review regression: a prefetch whose LOR enqueues *behind* an active
+    owner must not be drained to activeXacts=0 while queued — a dormant
+    non-head LOR is unfreeable (the blocked-and-drained rule only fires at
+    the head) and would wedge the class for every later request.  The
+    drain now waits for the LOR to head its queues, so the interleaving
+    owner-active → prefetch → third-party request → owner frees resolves
+    with the third party owning the class."""
+    from repro.core.lease import LeaseRequest
+
+    cfg = SimConfig(n_nodes=3, n_classes=8)
+    wl = BankWorkload(n_nodes=3, n_items=cfg.n_items)
+    c = make_cluster("FGL", wl, cfg)
+    cc = 5
+
+    def deliver(req):
+        for node in range(3):
+            c._on_opt(node, ("lease", req), req.proc)
+        for node in range(3):
+            c._on_to(node, ("lease", req), req.proc)
+
+    # node 0 holds cc with an active (undrained) transaction
+    deliver(LeaseRequest(req_id=1, proc=0, ccs=(cc,)))
+    # planner prefetch for node 1 enqueues second — must NOT drain yet
+    deliver(LeaseRequest(req_id=2, proc=1, ccs=(cc,), prefetch=True))
+    pre_lor = c.replicas[1].lm.cq[cc][1]
+    assert pre_lor.proc == 1 and pre_lor.activeXacts == 1
+    # node 2 requests cc: blocks the prefetch LOR while it is still queued
+    deliver(LeaseRequest(req_id=3, proc=2, ccs=(cc,)))
+    assert pre_lor.blocked
+    # owner 0 finishes its transaction and frees its LOR
+    lor0 = c.replicas[0].lm.cq[cc][0]
+    keys = [l.key() for l in c.replicas[0].lm.finished_xact([lor0])]
+    assert keys, "owner's blocked+drained LOR must free"
+    for node in range(3):
+        c._on_urb(node, ("freed", keys), 0)
+    c.events.run(until=100.0)              # flush the prefetch's own free
+    # the class is NOT wedged: node 2's request reaches the head everywhere
+    for r in c.replicas:
+        assert r.lm.head_owner(cc) == 2, r.lm.cq[cc]
+
+
+def test_sim_prefetch_is_piggybackable_and_freed_on_conflict():
+    """A prefetched LOR sits unblocked with activeXacts drained, so local
+    transactions piggyback on it; a conflicting remote request frees it by
+    the ordinary blocked-and-drained rule (no wedging)."""
+    from repro.core.lease import FGLLeaseManager, LeaseRequest
+
+    lms = [FGLLeaseManager(p, 4) for p in range(2)]
+    pre = LeaseRequest(req_id=1, proc=0, ccs=(2,), prefetch=True)
+    for lm in lms:
+        lors = lm.on_to_deliver(pre)
+        if lm.proc == 0:
+            assert not lm.finished_xact(lors)      # head, unblocked: stays
+    got = lms[0].try_piggyback(frozenset({2}))
+    assert got is not None and got[0].req_id == 1  # reuse without a request
+    assert not lms[0].finished_xact(got)
+    # a remote conflicting request blocks it; drained -> freed immediately
+    req = LeaseRequest(req_id=2, proc=1, ccs=(2,))
+    to_free = lms[0].on_opt_deliver(req)
+    assert [l.req_id for l in to_free] == [1]
+
+
+# ---------------------------------------------------------------------------
+# Serving engine integration
+# ---------------------------------------------------------------------------
+
+def _serve_engine(plan_cfg, kvb=1000.0, n_pods=2):
+    from repro.configs import get_smoke_config
+    from repro.serve.engine import MultiPodEngine, SimBackend
+    from repro.serve.router import LocalityRouter
+
+    cfg = get_smoke_config("mixtral-8x7b")
+    router = LocalityRouter(n_pods, policy="short", arbitration="priced",
+                            kv_bytes_per_token=kvb)
+    planner = PlacementPlanner(n_pods, 16, plan_cfg, grow=True)
+    eng = MultiPodEngine(n_pods, SimBackend(cfg), router, planner=planner)
+    return eng, router, planner
+
+
+def test_engine_planner_rehomes_misplaced_session():
+    """A session owned by the wrong pod but touched from its dominant
+    origin is re-homed by a planned move (not by a reactive acquire), with
+    the lease epoch bumped so stale forwards abort."""
+    from repro.serve.engine import Request
+
+    cfg = PlanConfig(epoch_ms=0.5, top_k=4, node_budget_bytes=np.inf,
+                     hysteresis_epochs=2, margin=0.5, min_frac=0.5,
+                     min_events=3.0, horizon_ms=500.0)
+    # heavy KV per token: the byte verdict keeps forwarding (never a
+    # reactive acquire), so any re-home must come from the planner
+    eng, router, planner = _serve_engine(cfg, kvb=10_000.0)
+    eng.submit(Request(sid=5, origin=1, n_tokens=2))   # misplaced at pod 1
+    eng.run_step()
+    epoch0 = router.lease_epoch[5]
+    for _ in range(12):                                # dominant origin: pod 0
+        eng.submit(Request(sid=5, origin=0, n_tokens=1))
+        eng.run_step()
+    assert router.owner[5] == 0                        # planner re-homed it
+    assert router.metrics.planned_moves >= 1
+    assert eng.metrics.plan_moves + eng.metrics.plan_prefetches >= 1
+    assert router.lease_epoch[5] > epoch0              # epoch bumped
+    assert router.metrics.acquires == 0                # no reactive acquire
+    eng.drain()
+    assert not any(eng.queues)
+
+
+def test_engine_planner_prefetch_counts_zero_byte_moves():
+    """A cacheless session (length 0) moves as a pure lease prefetch: no
+    wire bytes, counted separately from KV re-homes."""
+    cfg = PlanConfig(epoch_ms=0.5, top_k=4, node_budget_bytes=np.inf,
+                     hysteresis_epochs=2, margin=0.0, min_frac=0.5,
+                     min_events=2.0, horizon_ms=500.0)
+    eng, router, planner = _serve_engine(cfg)
+    # a session known to the ledger but with no cache yet, whose touch
+    # affinity (fed out-of-band, e.g. piggybacked metrics) points at pod 0
+    router.owner[7] = 1
+    router.lease_epoch[7] = 1
+    eng.session_home[7] = 1
+    for t in range(6):
+        planner.affinity.record_touch(float(t), 0, (7,))
+    wire0 = eng.metrics.wire_bytes
+    for _ in range(4):
+        eng.run_step()                     # idle steps advance the clock
+    assert router.owner[7] == 0
+    assert eng.metrics.plan_prefetches >= 1
+    assert eng.metrics.plan_moves == 0
+    assert eng.metrics.plan_bytes == 0.0
+    assert eng.metrics.wire_bytes == wire0             # nothing on the wire
+
+
+def test_router_planned_mode_keeps_byte_verdict_under_overload():
+    """With a planner attached the router never panic-acquires: the byte
+    verdict stands even when the owner violates constraint (3)."""
+    from repro.serve.router import LocalityRouter
+
+    r = LocalityRouter(4, policy="short", arbitration="priced",
+                       kv_bytes_per_token=1e6)
+    r.planned = True
+    r.route(0, 9, 0)                       # pod 0 owns sid 9
+    r.observe_cpu(np.array([1.0, 0.0, 0.0, 0.0]))
+    d = r.route(2, 9, 50)                  # heavy KV, owner overloaded
+    assert d.action == "forward" and d.target == 0
+    # un-planned router flips to acquire on the same inputs
+    r2 = LocalityRouter(4, policy="short", arbitration="priced",
+                        kv_bytes_per_token=1e6)
+    r2.route(0, 9, 0)
+    r2.observe_cpu(np.array([1.0, 0.0, 0.0, 0.0]))
+    assert r2.route(2, 9, 50).action == "acquire"

@@ -317,11 +317,18 @@ def test_engine_seq_shards_reprices_real_transfers():
 
 def test_router_freq_decays_with_clock():
     """Session-touch rates decay on the router clock (tick), so the LC
-    attractor is rate-based: old bursts fade once time passes."""
+    attractor is rate-based: old bursts fade once time passes.  Rates live
+    in ONE growable matrix (the planner-shared implementation), not a dict
+    of per-sid trackers."""
+    from repro.core.stats import DecayedFrequency
+
     r = LocalityRouter(2, policy="long", freq_tau_ms=100.0)
+    assert isinstance(r.freq, DecayedFrequency) and r.freq.grow_cols
     for _ in range(8):
         r.route(0, 7, 4)
-    hot = r._freq_by_sid[7].rates(r._now)[0, 0]
+    hot = r.freq.rates(r._now)[0, 7]
     r.tick(1000.0)                          # 10 tau of idle time
-    cold = r._freq_by_sid[7].rates(r._now)[0, 0]
+    cold = r.freq.rates(r._now)[0, 7]
     assert cold < 1e-3 * hot
+    r.evict(7)
+    assert r.freq.rates(r._now)[0, 7] == 0.0
