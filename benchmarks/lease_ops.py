@@ -1,0 +1,248 @@
+"""Lease control-plane throughput: sequential per-class loop vs batched ops.
+
+Replays the SAME replicated delivery schedule through the two lease
+managers and times the protocol work only:
+
+* ``sequential`` — :class:`repro.core.lease.FGLLeaseManager`: every
+  Opt/TO/Freed/FinishedXact message handled one at a time against the
+  per-class python queues (the Algorithm 1 oracle, and exactly what the
+  cluster ran before ``lease_mode="batched"``);
+* ``batched``    — :class:`repro.core.lease_batched.ShardedLeaseManager`:
+  each delivery *instant* (one round = the batch of messages a drain
+  window lands together) settled through the array ops —
+  ``opt_deliver_batch`` / ``to_deliver_batch`` / ``freed_batch`` /
+  ``enabled_mask`` / ``finish_batch`` — with head ownership, frees and
+  enablement coming out of one ``settle_lease_batch`` dispatch.
+
+The schedule is a miniature cluster: ``n_nodes`` replicas each applying
+every round's requests (conflicts drawn from a hot set so leases block,
+free and hand off), own-proc frees UR-delivered everywhere, waiters
+re-checked and finished as they reach their queue heads.  The per-message
+oracle pays python queue walks *and* the O(pending) born-blocked scan per
+own TO-deliver — precisely the per-class bookkeeping the batched instant
+replaces with scatters over the sharded arrays.
+
+Both runs must agree exactly (owner views, the flat freed-key stream,
+finish counts) — the bench asserts it, so the speedup is measured on a
+byte-identical execution.  Writes a ``BENCH_lease_ops.json`` artifact;
+``--check`` enforces the acceptance floor: batched ops/s >= 10x the
+sequential loop at >= 100k conflict classes.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.core.lease import FGLLeaseManager, LeaseRequest
+from repro.core.lease_batched import ShardedLeaseManager
+
+
+def make_schedule(n_nodes: int, n_classes: int, batch: int, rounds: int,
+                  *, hot_frac: float = 0.25, hot_classes: int = 1024,
+                  multi_frac: float = 0.1, seed: int = 0
+                  ) -> List[List[LeaseRequest]]:
+    """``rounds`` delivery instants of ``batch`` lease requests each.
+
+    A ``hot_frac`` slice of the requests lands on a small hot set so queues
+    actually conflict (blocking, frees, ownership handoff); the rest spray
+    over the full class space (the million-class regime the sharded layout
+    targets).  ``multi_frac`` requests span two classes, exercising
+    multi-LOR enablement.
+    """
+    rng = np.random.default_rng(seed)
+    hot = min(hot_classes, n_classes)
+    schedule: List[List[LeaseRequest]] = []
+    rid = 0
+    for _ in range(rounds):
+        reqs: List[LeaseRequest] = []
+        for _ in range(batch):
+            rid += 1
+            space = hot if rng.random() < hot_frac else n_classes
+            if rng.random() < multi_frac:
+                ccs = rng.choice(space, size=2, replace=False)
+                ccs = tuple(sorted(int(c) for c in ccs))
+            else:
+                ccs = (int(rng.integers(space)),)
+            reqs.append(LeaseRequest(req_id=rid, proc=rid % n_nodes, ccs=ccs))
+        schedule.append(reqs)
+    return schedule
+
+
+def run_protocol(mgrs, schedule, *, batched: bool) -> Dict:
+    """Drive the replicated protocol over the schedule; returns its trace.
+
+    Per round (one delivery instant): Opt-deliver the batch at every
+    replica (own unblocked-and-drained heads free), UR-deliver those frees
+    everywhere, TO-deliver the batch (enqueue; own LORs born blocked
+    against still-pending opts), then re-check every waiting request and
+    finish the newly enabled ones (their retained leases free later, when
+    a conflicting opt blocks them) — delivering finish-frees everywhere.
+    """
+    n_nodes = len(mgrs)
+    waiters: List[List[Tuple[LeaseRequest, list]]] = [[] for _ in mgrs]
+    freed_log: List[Tuple] = []
+    ops = finished = 0
+
+    def deliver_freed(frees_by_node):
+        nonlocal ops
+        keys = [l.key() for frees in frees_by_node for l in frees]
+        if not keys:
+            return
+        freed_log.extend(keys)
+        ops += len(keys) * n_nodes
+        for mgr in mgrs:
+            if batched:
+                mgr.freed_batch([keys])
+            else:
+                mgr.on_ur_deliver_freed(keys)
+
+    for reqs in schedule:
+        # 1) optimistic delivery: freeLocalLeases at every replica
+        opt_frees = []
+        for mgr in mgrs:
+            if batched:
+                opt_frees.append(mgr.opt_deliver_batch(reqs))
+            else:
+                fr = []
+                for r in reqs:
+                    fr.extend(mgr.on_opt_deliver(r))
+                opt_frees.append(fr)
+        ops += len(reqs) * n_nodes
+        deliver_freed(opt_frees)
+        # 2) total-order delivery: enqueue at every replica
+        for n, mgr in enumerate(mgrs):
+            if batched:
+                per_req = mgr.to_deliver_batch(reqs)
+            else:
+                per_req = [mgr.on_to_deliver(r) for r in reqs]
+            for r, lors in zip(reqs, per_req):
+                if r.proc == n and lors:
+                    waiters[n].append((r, lors))
+        ops += len(reqs) * n_nodes
+        # 3) enablement + finish at the owning replica
+        fin_frees = []
+        for n, mgr in enumerate(mgrs):
+            w = waiters[n]
+            if not w:
+                fin_frees.append([])
+                continue
+            groups = [lors for (_r, lors) in w]
+            if batched:
+                en = mgr.enabled_mask(groups)
+            else:
+                en = [mgr.is_enabled(lors) for lors in groups]
+            ops += len(w)
+            done = [g for g, e in zip(groups, en) if e]
+            waiters[n] = [we for we, e in zip(w, en) if not e]
+            finished += len(done)
+            if batched:
+                fin_frees.append(mgr.finish_batch(done))
+            else:
+                fr = []
+                for lors in done:
+                    fr.extend(mgr.finished_xact(lors))
+                fin_frees.append(fr)
+        deliver_freed(fin_frees)
+
+    return {
+        "ops": ops,
+        "finished": finished,
+        "waiting": [len(w) for w in waiters],
+        "freed_log": freed_log,
+        "owners": [m.owner_np() for m in mgrs],
+    }
+
+
+def bench_mode(mode: str, n_nodes: int, n_classes: int, schedule,
+               *, shards: int, jax_min: int) -> Tuple[Dict, float]:
+    def fresh():
+        if mode == "batched":
+            return [ShardedLeaseManager(n, n_classes, n_shards=shards,
+                                        jax_min=jax_min)
+                    for n in range(n_nodes)]
+        return [FGLLeaseManager(n, n_classes) for n in range(n_nodes)]
+
+    if mode == "batched":
+        # warm the jit caches on one throwaway full run: every (pow2 class
+        # count, waiter bucket) shape the schedule produces compiles here,
+        # so the timed run measures steady-state dispatch only
+        run_protocol(fresh(), schedule, batched=True)
+    mgrs = fresh()
+    t0 = time.perf_counter()
+    trace = run_protocol(mgrs, schedule, batched=(mode == "batched"))
+    dt = time.perf_counter() - t0
+    return trace, dt
+
+
+def main(argv=None) -> Dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--n-nodes", type=int, default=2)
+    ap.add_argument("--n-classes", type=int, default=1 << 20)
+    ap.add_argument("--batch", type=int, default=8192)
+    ap.add_argument("--rounds", type=int, default=6)
+    ap.add_argument("--shards", type=int, default=8)
+    ap.add_argument("--jax-min", type=int, default=64)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default="BENCH_lease_ops.json")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced schedule for CI: 128k classes, 3 rounds")
+    ap.add_argument("--check", action="store_true",
+                    help="fail unless batched >= 10x sequential ops/s")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        # the instant must stay drain-window sized: the >=10x floor is an
+        # asymptotic claim (the oracle's born-blocked scan is O(batch) per
+        # own enqueue), so tiny batches would measure dispatch overhead
+        args.n_classes, args.batch, args.rounds = 1 << 17, 8192, 3
+
+    schedule = make_schedule(args.n_nodes, args.n_classes, args.batch,
+                             args.rounds, seed=args.seed)
+    print(f"n_classes={args.n_classes} batch={args.batch} "
+          f"rounds={args.rounds} nodes={args.n_nodes}")
+    print("mode,ops,ops_per_s,wall_s,finished")
+    rows = []
+    traces = {}
+    for mode in ("sequential", "batched"):
+        trace, dt = bench_mode(mode, args.n_nodes, args.n_classes, schedule,
+                               shards=args.shards, jax_min=args.jax_min)
+        traces[mode] = trace
+        rows.append({"mode": mode, "ops": trace["ops"],
+                     "ops_per_s": trace["ops"] / dt, "wall_s": dt,
+                     "finished": trace["finished"]})
+        print(f"{mode},{trace['ops']},{trace['ops'] / dt:.0f},{dt:.3f},"
+              f"{trace['finished']}", flush=True)
+
+    # the speedup is only meaningful on a byte-identical execution
+    a, b = traces["sequential"], traces["batched"]
+    assert a["freed_log"] == b["freed_log"], "freed streams diverge"
+    assert a["finished"] == b["finished"] and a["waiting"] == b["waiting"]
+    for oa, ob in zip(a["owners"], b["owners"]):
+        np.testing.assert_array_equal(oa, ob)
+
+    speedup = rows[1]["ops_per_s"] / rows[0]["ops_per_s"]
+    out = {
+        "bench": "lease_ops",
+        "n_nodes": args.n_nodes, "n_classes": args.n_classes,
+        "batch": args.batch, "rounds": args.rounds,
+        "shards": args.shards, "jax_min": args.jax_min,
+        "smoke": bool(args.smoke),
+        "batched_speedup": speedup,
+        "rows": rows,
+    }
+    print(f"batched speedup: {speedup:.2f}x")
+    with open(args.out, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"wrote {args.out}")
+    if args.check:
+        assert args.n_classes >= 100_000, \
+            "check requires the >=100k-class regime"
+        assert speedup >= 10.0, f"batched speedup below 10x: {speedup:.2f}"
+    return out
+
+
+if __name__ == "__main__":
+    main()

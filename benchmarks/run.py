@@ -10,14 +10,73 @@ harness (full parameters via each module's own CLI):
 * §Roofline      — roofline.py      (reads results/dryrun)
 * serving layer  — serve_locality.py (framework-level locality)
 * self-optimization — planner.py    (proactive placement planner)
+* control plane  — lease_ops.py     (batched vs sequential lease manager)
+
+``python -m benchmarks.run --check`` instead validates the COMMITTED
+``results/BENCH_*.json`` artifacts against tolerance bands — the
+regression gate for the numbers the README quotes.  Bands, not point
+pins: benchmark hosts differ, but a refactor that erases an order-of-
+magnitude speedup or the planner's wire reduction must fail loudly.
 """
 from __future__ import annotations
 
+import json
+import os
 import sys
 import time
 
+# Tolerance bands for the committed artifacts.  Floors sit well under the
+# committed values (certify 9.35x, lease_ops ~30x, planner wire -78..-87%)
+# so a re-run on different hardware passes, while a semantic regression
+# (batching silently falling back to the loop, the planner not steering)
+# cannot.
+CERTIFY_MIN_SPEEDUP = 5.0
+LEASE_OPS_MIN_SPEEDUP = 10.0
+PLANNER_WIRE_REDUCTION = (0.70, 0.95)   # at locality >= 0.7
+
+
+def check_artifacts(results_dir: str = "results") -> None:
+    def load(name):
+        path = os.path.join(results_dir, name)
+        assert os.path.exists(path), f"missing committed artifact {path}"
+        with open(path) as f:
+            return json.load(f)
+
+    cert = load("BENCH_certify.json")
+    got = cert["best_jnp_speedup_batch_ge_64"]
+    assert got >= CERTIFY_MIN_SPEEDUP, (
+        f"certify: jnp speedup {got:.2f}x below {CERTIFY_MIN_SPEEDUP}x")
+    print(f"certify ok: jnp {got:.2f}x >= {CERTIFY_MIN_SPEEDUP}x")
+
+    lease = load("BENCH_lease_ops.json")
+    assert lease["n_classes"] >= 100_000, \
+        "lease_ops artifact not in the >=100k-class regime"
+    got = lease["batched_speedup"]
+    assert got >= LEASE_OPS_MIN_SPEEDUP, (
+        f"lease_ops: batched speedup {got:.2f}x below "
+        f"{LEASE_OPS_MIN_SPEEDUP}x")
+    print(f"lease_ops ok: batched {got:.2f}x >= {LEASE_OPS_MIN_SPEEDUP}x "
+          f"at {lease['n_classes']} classes")
+
+    plan = load("BENCH_planner.json")
+    by = {(r["planner"], r["locality"]): r for r in plan["rows"]}
+    lo_b, hi_b = PLANNER_WIRE_REDUCTION
+    hi = [p for (on, p) in by if on and p >= 0.7]
+    assert hi, "planner artifact has no locality >= 0.7 rows"
+    for p in sorted(hi):
+        off, on = by[(False, p)], by[(True, p)]
+        red = 1.0 - on["wire_GB"] / off["wire_GB"]
+        assert lo_b <= red <= hi_b, (
+            f"planner: wire reduction {red:.2%} at P={p} outside "
+            f"[{lo_b:.0%}, {hi_b:.0%}]")
+        print(f"planner ok: wire -{red:.1%} at P={p}")
+
 
 def main() -> None:
+    if "--check" in sys.argv[1:]:
+        check_artifacts()
+        print("[benchmarks.run] committed artifacts within tolerance bands")
+        return
     t0 = time.time()
     from benchmarks import bank, overload, roofline, serve_locality, tpcc
 
@@ -59,6 +118,13 @@ def main() -> None:
     print("=" * 72)
     from benchmarks import planner
     planner.main(["--smoke", "--out", "/tmp/BENCH_planner_run.json"])
+
+    print()
+    print("=" * 72)
+    print("== Lease control plane (batched vs sequential manager)")
+    print("=" * 72)
+    from benchmarks import lease_ops
+    lease_ops.main(["--smoke", "--out", "/tmp/BENCH_lease_ops_run.json"])
 
     print()
     print("=" * 72)

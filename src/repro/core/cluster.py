@@ -123,6 +123,27 @@ class SimConfig:
     # elsewhere).  The two agree bitwise — tests force this to 1 to pin the
     # vectorized path against the sequential oracle.
     certify_jax_min: int = 8
+    # Lease control plane.  "batched" (default, FGL only): the replicated
+    # conflict-queue state lives in the sharded array-backed manager
+    # (repro.core.lease_batched) — lease_shards owner shards by class hash,
+    # queue mutations as vectorized scatters, waiter/prefetch enablement
+    # settled per delivery instant through kernels.ops.settle_lease_batch
+    # once an instant packs >= lease_jax_min groups (numpy row math below,
+    # same verdicts).  "sequential" keeps the per-class python queues
+    # (LeaseManagerBase) as the byte-identical oracle; ALC always uses it
+    # (coarse multi-class LORs don't fit the one-LOR-per-class layout).
+    lease_mode: str = "batched"
+    lease_shards: int = 8
+    lease_jax_min: int = 64
+    # Ownership handoff.  "drain" is the paper's ordering: a transaction
+    # executes, then requests its leases, then waits for the current
+    # owner's LORs to drain.  "pipelined" is the Zeus-style overlap: the
+    # footprint is known at start (spec.items), so when the DTD would keep
+    # the transaction local its lease request is OA-broadcast *at start*
+    # and the request round + the owner's in-flight commit drain overlap
+    # the transaction's own execution; commit certification still waits
+    # for both execution and enablement, so safety is untouched.
+    handoff: str = "drain"
     # Commit-phase slot cost.  "amortized" (default, batched mode only):
     # the group of transactions enabled together occupies ONE worker slot
     # for cert_fixed_ms + len(group) * cert_per_txn_ms — simulated
@@ -175,8 +196,18 @@ class Replica:
     def __init__(self, node: int, cfg: SimConfig) -> None:
         self.node = node
         self.cfg = cfg
-        lm_cls = FGLLeaseManager if cfg.lease_kind == "fgl" else ALCLeaseManager
-        self.lm = lm_cls(node, cfg.n_classes)
+        if cfg.lease_mode not in ("batched", "sequential"):
+            raise ValueError(f"unknown lease_mode {cfg.lease_mode!r}")
+        if cfg.lease_kind == "fgl" and cfg.lease_mode == "batched":
+            from .lease_batched import ShardedLeaseManager
+
+            self.lm = ShardedLeaseManager(
+                node, cfg.n_classes, n_shards=cfg.lease_shards,
+                jax_min=cfg.lease_jax_min)
+        elif cfg.lease_kind == "fgl":
+            self.lm = FGLLeaseManager(node, cfg.n_classes)
+        else:
+            self.lm = ALCLeaseManager(node, cfg.n_classes)
         self.store = VersionedStore(cfg.n_items, cfg.init_value)
         self.freq = DecayedFrequency(cfg.n_nodes, cfg.n_classes)
         self.cpu_view = np.zeros((cfg.n_nodes,), dtype=np.float64)
@@ -211,6 +242,10 @@ class SimTxn:
     forwards: int = 0
     reused: bool = False
     result: float = 0.0
+    # pipelined handoff (SimConfig.handoff="pipelined"): the lease round
+    # was issued at start; commit joins on (execution done AND LORs held)
+    early: bool = False
+    exec_done: bool = False
 
 
 # --------------------------------------------------------------------------
@@ -327,7 +362,7 @@ class Cluster:
         self.metrics.plan_epochs += 1
         coord = self.replicas[alive[0]]
         n_cls = self.cfg.n_classes
-        owner = np.asarray(coord.lm.owner_view(), dtype=np.int32)
+        owner = coord.lm.owner_np().astype(np.int32)
         # a lease prefetch ships no state (write-sets replicate via URB
         # regardless of ownership) — costs are the paper's step constants
         step = self.cfg.latency.step_ms
@@ -341,7 +376,7 @@ class Cluster:
             if not self.gcs.alive(mv.dst):
                 continue
             dlm = self.replicas[mv.dst].lm
-            if any(l.proc == mv.dst and not l.blocked for l in dlm.cq[mv.cc]):
+            if dlm.has_unblocked(mv.cc, mv.dst):
                 continue                 # dst already holds / awaits it
             req = LeaseRequest(
                 req_id=next(self._reqid), proc=mv.dst, ccs=(mv.cc,),
@@ -425,17 +460,70 @@ class Cluster:
         mean = spec.exec_ms or (self.cfg.ro_exec_ms if spec.read_only else self.cfg.exec_ms)
         dur = float(rng.exponential(mean) * 0.5 + mean * 0.5)  # bounded jitter
         dur *= self.replicas[node].slowdown
+        if self.cfg.handoff == "pipelined" and not spec.read_only:
+            self._early_acquire(txn, node)
         self._request_slot(node, lambda: self.events.schedule(dur, lambda: self._exec_done(txn, node)))
+
+    def _early_acquire(self, txn: SimTxn, node: int) -> None:
+        """Zeus-style pipelined handoff: issue the lease round at start.
+
+        The footprint is known from ``spec.items`` before execution, so
+        when the DTD verdict is "certify locally" the OAB request round and
+        the current owner's in-flight commit drain run *under* this
+        transaction's execution instead of after it.  When the DTD wants to
+        migrate the work, the reactive request-after-execute path is kept —
+        acquiring remotely-homed classes early would fight the forwarder.
+        """
+        r = self.replicas[node]
+        target = self.dtd.decide(
+            origin=node,
+            ccs=txn.ccs,
+            lease_owner_of_cc=r.lm.head_owner,
+            freq_rates=r.freq.rates(self.events.now),
+            cpu=r.cpu_view,
+            opt_hint=txn.spec.opt_hint,
+        )
+        if (target != node and self.gcs.alive(target)
+                and self.cfg.forward.may_forward(txn.forwards)):
+            return
+        txn.early = True
+        txn.exec_node = node
+        self._inflight[txn.txid] = txn
+        lors = r.lm.try_piggyback(txn.ccs)
+        if lors is not None:
+            txn.reused = True
+            self.metrics.piggybacks += 1
+            txn.lors = lors
+            return
+        req = LeaseRequest(
+            req_id=next(self._reqid),
+            proc=node,
+            ccs=tuple(sorted(txn.ccs)),
+            coarse=(self.cfg.lease_kind == "alc"),
+        )
+        r.lm.n_requests += 1
+        self.metrics.lease_requests += 1
+        r.pending_reqs[req.req_id] = txn
+        self.gcs.oa_broadcast(node, ("lease", req))
 
     def _exec_done(self, txn: SimTxn, node: int) -> None:
         r = self.replicas[node]
         txn.stm = Transaction(txid=txn.txid, origin=txn.origin)
         txn.result = txn.spec.execute(r.store, txn.stm)
         self._release_slot(node)
+        txn.exec_done = True
         if txn.spec.read_only:
             self.events.schedule(
                 self.cfg.local_commit_ms, lambda: self._txn_done(txn, committed=True)
             )
+            return
+        if txn.early:
+            # pipelined handoff: the lease round ran under execution; enter
+            # the commit phase now if the LORs are already held, else the
+            # pending TO-deliver joins (_on_to sees exec_done)
+            self.metrics.rw_certified += 1
+            if txn.lors:
+                self._wait_enabled(txn, node)
             return
         self._dispatch(txn, node)
 
@@ -506,8 +594,11 @@ class Cluster:
             self._settle_prefetches(node)
         still: List[Tuple[SimTxn, List[LOR]]] = []
         ready: List[SimTxn] = []
-        for (txn, lors) in r.waiters:
-            if r.lm.is_enabled(lors):
+        # one vectorized isEnabled settle over every waiting commit phase
+        # (the sequential oracle's enabled_mask is the per-group loop)
+        enabled = r.lm.enabled_mask([lors for (_txn, lors) in r.waiters])
+        for (txn, lors), ok in zip(r.waiters, enabled):
+            if ok:
                 ready.append(txn)
             else:
                 still.append((txn, lors))
@@ -570,8 +661,9 @@ class Cluster:
         r = self.replicas[node]
         still: List[List[LOR]] = []
         to_free: List[LOR] = []
-        for lors in r.prefetch_waiters:
-            if r.lm.is_enabled(lors):
+        enabled = r.lm.enabled_mask(r.prefetch_waiters)
+        for lors, ok in zip(r.prefetch_waiters, enabled):
+            if ok:
                 to_free.extend(r.lm.finished_xact(lors))
             else:
                 still.append(lors)
@@ -607,9 +699,7 @@ class Cluster:
         if self._item_cc is None:
             return None
         lm = self.replicas[node].lm
-        owners = np.fromiter(
-            (lm.head_owner(cc) for cc in range(lm.n_classes)),
-            np.int64, count=lm.n_classes)
+        owners = lm.owner_np()
         per_item = owners[self._item_cc]
         return ((per_item >= 0) & (per_item != node)).astype(np.int32)
 
@@ -803,7 +893,10 @@ class Cluster:
                 txn = r.pending_reqs.pop(req.req_id, None)
                 if txn is not None:
                     txn.lors = lors
-                    self._wait_enabled(txn, node)
+                    if txn.exec_done:
+                        self._wait_enabled(txn, node)
+                    # else: pipelined handoff — the lease round finished
+                    # before the overlapped execution; _exec_done joins
         self._check_waiters(node)
 
     def _on_urb(self, node: int, msg, sender: int) -> None:
@@ -846,6 +939,12 @@ class Cluster:
     def _on_view_change(self, node: int, view: List[int], failed: int) -> None:
         r = self.replicas[node]
         r.lm.purge_proc(failed)
+        if self.planner is not None:
+            # the planner's state must die with the member too: its affinity
+            # rows would keep attracting moves toward the dead node, and
+            # history entries naming it would mis-gate reversals (idempotent
+            # — every surviving replica's view change applies it)
+            self.planner.purge_node(failed)
         # transactions this node forwarded to (or had pending at) the failed
         # member are restarted locally — fail-stop recovery for the TF path.
         for txid, txn in list(self._inflight.items()):

@@ -28,6 +28,8 @@ import itertools
 from dataclasses import dataclass, field
 from typing import Dict, FrozenSet, Iterable, List, Optional, Sequence, Tuple
 
+import numpy as np
+
 
 # --------------------------------------------------------------------------
 # Records
@@ -123,6 +125,24 @@ class LeaseManagerBase:
     def owns_all(self, ccs: Iterable[int]) -> bool:
         """True iff this replica's LORs head every queue in ``ccs``."""
         return all(self.head_owner(cc) == self.proc for cc in ccs)
+
+    def owner_np(self) -> np.ndarray:
+        """Ownership vector as an int64 array (-1: unowned) — the shape the
+        certification kernel's write-lock derivation consumes."""
+        return np.fromiter(
+            (self.head_owner(cc) for cc in range(self.n_classes)),
+            np.int64, count=self.n_classes)
+
+    def has_unblocked(self, cc: int, proc: int) -> bool:
+        """True iff ``proc`` has an unblocked LOR anywhere in ``cc``'s queue
+        (it holds the lease or is already queued to get it)."""
+        return any(l.proc == proc and not l.blocked for l in self.cq[cc])
+
+    def enabled_mask(self, groups: Sequence[Sequence[LOR]]) -> List[bool]:
+        """``isEnabled`` over many waiting groups.  The sequential oracle
+        just loops; the sharded manager overrides this with one vectorized
+        settle per instant."""
+        return [self.is_enabled(g) for g in groups]
 
     # -- protocol events (identical in both variants) -----------------------
     def on_to_deliver(self, req: LeaseRequest) -> List[LOR]:
@@ -225,11 +245,15 @@ class LeaseManagerBase:
                 del self._pending_opt[req_id]
         for cc in range(self.n_classes):
             self.cq[cc] = [l for l in self.cq[cc] if l.proc != proc]
+        # all LORs of one request belong to its issuing proc, so removal is
+        # whole-request: a "keep the other procs' LORs" branch here could
+        # only ever retain records whose queue entries were just purged
+        # (dangling LORs) — assert the invariant instead of masking it
         for req_id in list(self._by_req):
-            kept = [l for l in self._by_req[req_id] if l.proc != proc]
-            if kept:
-                self._by_req[req_id] = kept
-            else:
+            owners = {l.proc for l in self._by_req[req_id]}
+            assert len(owners) == 1, \
+                "invariant violated: LORs of one request span procs"
+            if proc in owners:
                 del self._by_req[req_id]
 
     # -- to override ---------------------------------------------------------

@@ -83,6 +83,28 @@ class DecayedFrequency:
         if col < self.counts.shape[1]:
             self.counts[:, col] = 0.0
 
+    # zero_col under its control-plane name: eviction *frees* the column
+    # for reuse by a recycled id (the epoch tombstone lives with the
+    # consumer; see repro.serve.router.LocalityRouter.evict)
+    free_col = zero_col
+
+    def shrink_to(self, n_cols: int, *, floor: int = 64) -> None:
+        """Shrink the grown column space to the pow2 covering ``n_cols``.
+
+        The grow-only policy means a burst of high session ids pins memory
+        forever; after mass evictions the consumer passes its highest live
+        id + 1 and the matrix drops back.  Hysteresis: only shrink when at
+        least 4x over target, so churn around a boundary never thrashes
+        reallocation.  No-op for fixed-width matrices.
+        """
+        if not self.grow_cols:
+            return
+        target = max(1, floor)
+        while target < n_cols:
+            target *= 2
+        if target * 4 <= self.counts.shape[1]:
+            self.counts = self.counts[:, :target].copy()
+
 
 class CpuMeter:
     """EWMA utilization of a node's execution slots."""

@@ -44,6 +44,34 @@ def ssd(x, dt, a, b_mat, c_mat, *, chunk=256, h0=None, backend: str = "auto"):
 
 
 @jax.jit
+def _lease_settle_jit(head_req, head_proc, head_active, qlen, fresh_blocked,
+                      wait_req, wait_cc, proc):
+    return ref.lease_settle_ref(head_req, head_proc, head_active, qlen,
+                                fresh_blocked, wait_req, wait_cc, proc)
+
+
+def settle_lease_batch(head_req, head_proc, head_active, qlen, fresh_blocked,
+                       wait_req, wait_cc, proc, *, backend: str = "auto"):
+    """One jit'd lease settle per delivery instant — the dispatch point of
+    the sharded lease control plane (``repro.core.lease_batched``).
+
+    Returns ``(owner[C], free[C], enabled[B])``: head ownership,
+    blocked-and-drained frees, and ``isEnabled`` verdicts for the packed
+    waiting groups.  All inputs are pow2-bucketed by the caller so
+    recurring instant shapes reuse the compiled kernel; there is no
+    hand-written Pallas variant yet — the jit'd jnp path is the dispatch
+    on every backend (same structure as ``validate_transactions``'s ref
+    path, and the hook point for a TPU kernel later).
+    """
+    del backend  # single jit'd path for now; kept for API symmetry
+    return _lease_settle_jit(
+        jnp.asarray(head_req, jnp.int32), jnp.asarray(head_proc, jnp.int32),
+        jnp.asarray(head_active, jnp.int32), jnp.asarray(qlen, jnp.int32),
+        jnp.asarray(fresh_blocked, bool), jnp.asarray(wait_req, jnp.int32),
+        jnp.asarray(wait_cc, jnp.int32), jnp.int32(proc))
+
+
+@jax.jit
 def _lease_validate_ref_jit(store_versions, read_items, read_versions,
                             write_locks, write_items):
     return ref.lease_validate_ref(store_versions, read_items, read_versions,

@@ -31,6 +31,42 @@ def ssd_ref(
                        return_final_state=True)
 
 
+# --- lease-settle oracle -------------------------------------------------------
+
+def lease_settle_ref(
+    head_req: jax.Array,      # [C] int32, -1 when the queue is empty
+    head_proc: jax.Array,     # [C] int32
+    head_active: jax.Array,   # [C] int32
+    qlen: jax.Array,          # [C] int32
+    fresh_blocked: jax.Array,  # [C] bool: head newly blocked this instant
+    wait_req: jax.Array,      # [B, K] int32, -1 padded (waiting groups)
+    wait_cc: jax.Array,       # [B, K] int32, -1 padded
+    proc,                     # scalar int32: the settling replica
+):
+    """One lease-settle over a replica's packed conflict-queue heads.
+
+    Algorithm 1's three per-instant queries as gather/compare math:
+
+    * ``owner[c]``   — head ownership L(i, x) (-1: unowned);
+    * ``free[c]``    — the blocked-and-drained rule: a head that is ours,
+      was *newly* blocked at this instant (``fresh_blocked``), and has no
+      active transactions must be freed now (already-blocked dormant heads
+      were freed when they first blocked — re-freeing them would dequeue
+      twice);
+    * ``enabled[b]`` — ``isEnabled``: every LOR of waiting group ``b``
+      heads its queue (matched by req_id, which is unique per queue).
+    """
+    c = head_req.shape[0]
+    occupied = qlen > 0
+    owner = jnp.where(occupied, head_proc, -1).astype(jnp.int32)
+    free = occupied & fresh_blocked & (head_proc == proc) & (head_active == 0)
+    valid = wait_cc >= 0
+    cc = jnp.clip(wait_cc, 0, c - 1)
+    at_head = occupied[cc] & (head_req[cc] == wait_req)
+    enabled = jnp.all(jnp.where(valid, at_head, True), axis=1)
+    return owner, free, enabled
+
+
 # --- lease-validate oracle -----------------------------------------------------
 
 def lease_validate_ref(

@@ -102,3 +102,19 @@ class AffinityTracker:
             self.co.zero_col(cc)
             if cc < self.co.counts.shape[0]:
                 self.co.counts[cc, :] = 0.0
+
+    def purge_node(self, node: int) -> None:
+        """Drop a failed node's rows: a dead member must stop attracting
+        (or repelling) planned moves.  Co-access is class-to-class and
+        keeps no node axis."""
+        self.node.counts[node, :] = 0.0
+        self.aborts.counts[node, :] = 0.0
+
+    def compact(self, n_classes: int) -> None:
+        """Shrink the grown column spaces down to ``n_classes`` live
+        classes (see :meth:`DecayedFrequency.shrink_to` for the pow2 +
+        hysteresis policy)."""
+        self.node.shrink_to(n_classes)
+        self.aborts.shrink_to(n_classes)
+        if self.co is not None:
+            self.co.shrink_to(n_classes)

@@ -127,6 +127,23 @@ class PlacementPlanner:
             replace(SERVE_PLAN_DEFAULTS, epoch_ms=epoch_ms)
         return cls(n_pods, n_sessions, cfg, grow=True)
 
+    # -- view change ---------------------------------------------------------
+    def purge_node(self, node: int) -> None:
+        """A member failed: drop every planner trace of it.
+
+        Without this the planner keeps steering at a ghost — the dead
+        node's affinity rows still attract moves toward it, and history
+        entries naming it mis-gate live moves (a class moved *to* the dead
+        node recently would refuse its rescue move back as a "reversal").
+        Executors already skip dead targets, so this is about not wasting
+        the bounded plan (top-K slots, byte budget) on them and not
+        blocking the survivors.  Idempotent: every surviving replica's
+        view-change handler may call it.
+        """
+        self.affinity.purge_node(node)
+        self._history = deque(
+            h for h in self._history if h[2] != node and h[3] != node)
+
     # -- hysteresis ----------------------------------------------------------
     def _reverses_recent(self, cc: int, dst: int) -> bool:
         w = self.cfg.hysteresis_epochs

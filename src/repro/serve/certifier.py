@@ -70,6 +70,12 @@ class StepCertifier:
         self.store = VersionedStore(64)
         self.pending: List[List[Tuple[object, int]]] = [
             [] for _ in range(n_pods)]
+        # deferred epoch stamps: bump() appends here and the queue settles
+        # through ONE VersionedStore.apply_batch scatter at the next store
+        # read (drain / epoch), instead of a per-call apply_versioned —
+        # the ownership round's writes ride the same array path as the
+        # certification reads
+        self._bumps: List[Tuple[int, int]] = []
         self.metrics = CertifierMetrics()
 
     # -- epoch store ---------------------------------------------------------
@@ -88,12 +94,35 @@ class StepCertifier:
 
     def epoch(self, sid: int) -> int:
         self._ensure(sid)
+        self._flush_bumps()
         return int(self.store.versions[sid])
 
     def bump(self, sid: int, epoch: int) -> None:
-        """Ownership moved: stamp the session's new lease epoch."""
+        """Ownership moved: stamp the session's new lease epoch (deferred
+        to the next store read; ordering within the queue is preserved —
+        ``apply_batch`` is last-writer-wins per item)."""
         self._ensure(sid)
-        self.store.apply_versioned({sid: float(epoch)}, epoch)
+        self._bumps.append((sid, epoch))
+
+    def _flush_bumps(self) -> None:
+        if not self._bumps:
+            return
+        self.store.apply_batch(
+            [{sid: float(e)} for (sid, e) in self._bumps],
+            [e for (_sid, e) in self._bumps])
+        self._bumps = []
+
+    def purge(self, sid: int) -> int:
+        """Drop the evicted session's queued forwards everywhere; returns
+        how many were dropped.  Without this an in-flight forward of a dead
+        session would abort at drain and *resubmit*, resurrecting the
+        session the caller just retired."""
+        n = 0
+        for pod in range(self.n_pods):
+            kept = [(r, e) for (r, e) in self.pending[pod] if r.sid != sid]
+            n += len(self.pending[pod]) - len(kept)
+            self.pending[pod] = kept
+        return n
 
     # -- the per-step batch --------------------------------------------------
     def enqueue(self, pod: int, req, epoch: int) -> None:
@@ -124,8 +153,10 @@ class StepCertifier:
         """
         entries = self.pending[pod]
         if not entries:
+            self._flush_bumps()
             return [], [], 0.0
         self.pending[pod] = []
+        self._flush_bumps()
         if len(entries) >= self.jax_min:
             from repro.core.stm import validate_batch
 

@@ -431,6 +431,27 @@ class MultiPodEngine:
         else:
             m.plan_prefetches += 1
 
+    def evict_session(self, sid: int) -> None:
+        """Retire a finished session everywhere it has state.
+
+        Frees the cache column and queued work, drops its queued forwards
+        from the certification batches (they would otherwise abort at drain
+        and *resubmit*, resurrecting the session), and stamps the router's
+        tombstone epoch into the certifier store — so a forward of the dead
+        tenancy still on the wire fails certification, and a later recycle
+        of the sid places at an epoch above the tombstone (see
+        ``LocalityRouter.evict``).
+        """
+        home = self.session_home.pop(sid, None)
+        self.session_len.pop(sid, None)
+        for pod in range(self.n_pods):
+            self.queues[pod] = [r for r in self.queues[pod] if r.sid != sid]
+        if home is not None:
+            self.backend.drop(home, sid)
+        self.certifier.purge(sid)
+        tomb = self.router.evict(sid)
+        self.certifier.bump(sid, tomb)
+
     def drain(self, max_steps: int = 10_000) -> None:
         steps = 0
         while (any(self.queues) or self.certifier.has_pending()) \

@@ -111,6 +111,12 @@ class LocalityRouter:
         self.dtd = DTD(DTDConfig(policy=policy, max_cpu=max_cpu), n_pods)
         self.owner: Dict[int, int] = {}          # session -> owning pod
         self.lease_epoch: Dict[int, int] = {}    # session -> ownership epoch
+        # tombstone floor for evicted sids: lease_epoch holds *live*
+        # sessions only; an absent sid resolves to this floor, which is
+        # raised past every evicted session's last epoch.  A recycled sid
+        # therefore starts above anything its previous tenancy ever
+        # stamped — the no-alias guarantee without an ever-growing dict.
+        self._epoch_floor = 0
         self.freq_tau_ms = freq_tau_ms
         # per-session touch rates, one growable [pod, sid] matrix on the
         # router clock (shared implementation with the planner's affinity)
@@ -150,7 +156,7 @@ class LocalityRouter:
         m.requests += 1
         self._touch(origin, sid)
         owner = self.owner.get(sid, -1)
-        epoch = self.lease_epoch.get(sid, 0)
+        epoch = self.lease_epoch.get(sid, self._epoch_floor)
 
         if owner == origin:
             m.local_hits += 1
@@ -257,15 +263,37 @@ class LocalityRouter:
         every ownership transition bumps, so forwards routed against the
         old owner fail certification and re-route."""
         self.owner[sid] = dst
-        epoch = self.lease_epoch.get(sid, 0) + 1
+        epoch = self.lease_epoch.get(sid, self._epoch_floor) + 1
         self.lease_epoch[sid] = epoch
         self.metrics.planned_moves += 1
         return epoch
 
-    def evict(self, sid: int) -> None:
+    def evict(self, sid: int) -> int:
+        """Retire a session from the ledger; returns its tombstone epoch.
+
+        The sid's epoch entry is *folded into* ``_epoch_floor`` rather than
+        kept (the dict holds live sessions only): the floor is raised past
+        the evicted epoch, and an absent sid resolves to the floor on its
+        next appearance.  Callers stamp the returned tombstone into their
+        epoch store (:meth:`repro.serve.certifier.StepCertifier.bump`) so a
+        forward of the dead tenancy still on the wire fails certification —
+        and a recycled sid's first placement bumps *above* the tombstone,
+        so it can never be aliased by that stale forward either.
+        """
         self.owner.pop(sid, None)
-        # lease_epoch survives eviction on purpose: a recycled sid keeps
-        # counting up, so stale in-flight forwards can never alias epoch 0
+        e = self.lease_epoch.pop(sid, self._epoch_floor)
+        self._epoch_floor = max(self._epoch_floor, e + 1)
         self.freq.zero_col(sid)
         if self.affinity is not None:
             self.affinity.forget(sid)
+        self._maybe_compact()
+        return self._epoch_floor
+
+    def _maybe_compact(self) -> None:
+        """Shrink the grown per-session stat columns back toward the live
+        sid range (pow2 + 4x hysteresis, see ``DecayedFrequency.shrink_to``)
+        — a burst of high sids must not pin memory after mass eviction."""
+        hi = (max(self.owner) + 1) if self.owner else 0
+        self.freq.shrink_to(hi)
+        if self.affinity is not None:
+            self.affinity.compact(hi)

@@ -1,0 +1,364 @@
+"""Equivalence and regression tests for the sharded batched lease manager.
+
+The contract under test: :class:`repro.core.lease_batched.ShardedLeaseManager`
+is *byte-identical* to the Algorithm 1 oracle
+(:class:`repro.core.lease.FGLLeaseManager`) — same frees in the same order,
+same owner views, same enablement — while doing its queue work in batched
+array ops.  Plus the failure-path / bookkeeping regressions that ride this
+PR: planner view-change purge, whole-request ``purge_proc``, lease-epoch
+tombstones with stat-matrix compaction, and engine session eviction.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import BankWorkload, SimConfig, make_cluster
+from repro.core.lease import FGLLeaseManager, LeaseRequest
+from repro.core.lease_batched import ShardedLeaseManager, _settle_np
+
+
+def _req(req_id, proc, ccs):
+    return LeaseRequest(req_id=req_id, proc=proc, ccs=tuple(sorted(ccs)))
+
+
+def _mgrs(n_procs, n_classes, **kw):
+    """(oracle replicas, batched replicas) over the same class space."""
+    return ([FGLLeaseManager(p, n_classes) for p in range(n_procs)],
+            [ShardedLeaseManager(p, n_classes, **kw) for p in range(n_procs)])
+
+
+def _keys(lors):
+    return [l.key() for l in lors]
+
+
+# ---------------------------------------------------------------------------
+# Manager-level equivalence
+# ---------------------------------------------------------------------------
+
+def test_scripted_ops_match_oracle():
+    """A hand-rolled opt/TO/free/finish script produces identical frees,
+    owner views and enablement through both managers."""
+    (a,), (b,) = _mgrs(1, 8, n_shards=2)
+    remote = FGLLeaseManager(1, 8)       # drives deliveries for proc 1
+    for lm in (a, b):
+        lors = lm.on_to_deliver(_req(1, 0, (1, 2)))
+        assert [l.cc for l in lors] == [1, 2]
+        assert lm.is_enabled(lors)
+        # remote request opt-delivered -> own busy head blocked, not freed
+        assert lm.on_opt_deliver(_req(2, 1, (2,))) == []
+        freed = lm.finished_xact(lors)   # drain -> the blocked LOR frees
+        assert _keys(freed) == [(1, 0, (2,))]
+        lm.on_ur_deliver_freed(_keys(freed))
+        lm.on_to_deliver(_req(2, 1, (2,)))
+    assert a.owner_view() == b.owner_view()
+    assert a.head_owner(2) == b.head_owner(2) == 1
+    assert a.head_owner(1) == b.head_owner(1) == 0   # retained for reuse
+    # piggyback parity: the retained cc=1 LOR is reusable, cc=2 is not
+    assert a.try_piggyback(frozenset({1, 2})) is None
+    assert b.try_piggyback(frozenset({1, 2})) is None
+    assert a.try_piggyback(frozenset({1})) is not None
+    assert b.try_piggyback(frozenset({1})) is not None
+
+
+def _drive_replicated(mgr_sets, reqs_rounds, purge_at=None):
+    """Replay rounds of requests through replicated manager sets in the
+    protocol order (opt -> freed -> TO -> enable/finish -> freed), returning
+    each set's observable trace.  ``purge_at`` injects a view change (node 1
+    fails) before that round at every replica."""
+    traces = []
+    for mgrs in mgr_sets:
+        n = len(mgrs)
+        waiters = [[] for _ in mgrs]
+        trace = {"freed": [], "finished": 0}
+
+        def deliver(frees_by_node):
+            keys = [k for fr in frees_by_node for k in _keys(fr)]
+            trace["freed"].extend(keys)
+            for m in mgrs:
+                m.on_ur_deliver_freed(keys)
+
+        for rnd, reqs in enumerate(reqs_rounds):
+            if purge_at == rnd:
+                for m in mgrs:
+                    m.purge_proc(1)
+                waiters[1] = []
+            deliver([sum((m.on_opt_deliver(r) for r in reqs), [])
+                     for m in mgrs])
+            for p, m in enumerate(mgrs):
+                for r in reqs:
+                    lors = m.on_to_deliver(r)
+                    if r.proc == p and lors:
+                        waiters[p].append(lors)
+            fin = []
+            for p, m in enumerate(mgrs):
+                done = [g for g in waiters[p] if m.is_enabled(g)]
+                waiters[p] = [g for g in waiters[p] if not m.is_enabled(g)]
+                trace["finished"] += len(done)
+                fin.append(sum((m.finished_xact(g) for g in done), []))
+            deliver(fin)
+        trace["owners"] = [m.owner_view() for m in mgrs]
+        traces.append(trace)
+    return traces
+
+
+def test_replicated_rounds_match_oracle_with_view_change():
+    """Multi-round replicated run, including a mid-run purge_proc, keeps
+    the two managers in lockstep (frees, finish counts, owner views)."""
+    rng = np.random.default_rng(7)
+    rounds, rid = [], 0
+    for _ in range(6):
+        reqs = []
+        for _ in range(12):
+            rid += 1
+            ccs = rng.choice(10, size=int(rng.integers(1, 3)), replace=False)
+            reqs.append(_req(rid, rid % 3, tuple(int(c) for c in ccs)))
+        rounds.append(reqs)
+    oracle, batched = _mgrs(3, 10, n_shards=2, jax_min=1)
+    ta, tb = _drive_replicated([oracle, batched], rounds, purge_at=3)
+    assert ta == tb
+
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:          # pragma: no cover - CI installs hypothesis
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    @st.composite
+    def _histories(draw):
+        n_classes = draw(st.integers(2, 8))
+        n_procs = draw(st.integers(2, 3))
+        rounds = draw(st.lists(
+            st.lists(st.sets(st.integers(0, n_classes - 1), min_size=1,
+                             max_size=min(3, n_classes)),
+                     min_size=1, max_size=6),
+            min_size=1, max_size=5))
+        purge_at = draw(st.one_of(st.none(),
+                                  st.integers(0, len(rounds) - 1)))
+        return n_classes, n_procs, rounds, purge_at
+
+    @settings(max_examples=60, deadline=None)
+    @given(_histories())
+    def test_random_histories_match_oracle(hist):
+        """Arbitrary replicated histories (multi-class requests, delayed
+        frees, optional view change): the batched manager tracks the
+        oracle exactly."""
+        n_classes, n_procs, rounds, purge_at = hist
+        rid = 0
+        reqs_rounds = []
+        for rnd in rounds:
+            reqs = []
+            for ccs in rnd:
+                rid += 1
+                reqs.append(_req(rid, rid % n_procs, tuple(ccs)))
+            reqs_rounds.append(reqs)
+        oracle, batched = _mgrs(n_procs, n_classes, n_shards=2, jax_min=1)
+        ta, tb = _drive_replicated([oracle, batched], reqs_rounds,
+                                   purge_at=purge_at)
+        assert ta == tb
+
+
+def test_purge_proc_removes_whole_requests():
+    """S2 regression: a failed member's multi-class request vanishes from
+    EVERY queue it sat in — no half-purged request may linger."""
+    (a,), (b,) = _mgrs(1, 8, n_shards=2)
+    for lm in (a, b):
+        lm.on_to_deliver(_req(1, 1, (0, 3, 5)))
+        mine = lm.on_to_deliver(_req(2, 0, (0, 5)))
+        assert not lm.is_enabled(mine)
+        lm.purge_proc(1)
+        assert lm.is_enabled(mine)
+        # late free of the purged request is a no-op, not a crash
+        lm.on_ur_deliver_freed([(1, 1, (0, 3, 5))])
+    assert a.owner_view() == b.owner_view()
+
+
+# ---------------------------------------------------------------------------
+# Kernel parity
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(4))
+def test_settle_kernel_matches_numpy(seed):
+    """The jit'd settle_lease_batch and its numpy twin agree bitwise on
+    random compact head states and waiter groups."""
+    from repro.kernels import ops
+
+    rng = np.random.default_rng(seed)
+    C, B, K, proc = 16, 8, 4, 0
+    qlen = rng.integers(0, 3, C).astype(np.int32)
+    head_req = rng.integers(1, 6, C).astype(np.int32)
+    head_proc = rng.integers(0, 3, C).astype(np.int32)
+    head_active = rng.integers(0, 2, C).astype(np.int32)
+    fresh = rng.random(C) < 0.4
+    wait_req = rng.integers(1, 6, (B, K)).astype(np.int32)
+    wait_cc = np.where(rng.random((B, K)) < 0.3, -1,
+                       rng.integers(0, C, (B, K))).astype(np.int32)
+    got = ops.settle_lease_batch(head_req, head_proc, head_active, qlen,
+                                 fresh, wait_req, wait_cc, proc)
+    want = _settle_np(head_req, head_proc, head_active, qlen, fresh,
+                      wait_req, wait_cc, proc)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), w)
+
+
+# ---------------------------------------------------------------------------
+# Full-simulation byte-equivalence + pipelined handoff
+# ---------------------------------------------------------------------------
+
+def _run_sim(mode, *, fail_at=None, jax_min=64, handoff="drain",
+             duration=250.0, locality=0.6, seed=0):
+    cfg = SimConfig(duration_ms=duration, warmup_ms=50.0, seed=seed,
+                    lease_mode=mode, lease_jax_min=jax_min, handoff=handoff)
+    wl = BankWorkload(n_nodes=cfg.n_nodes, n_items=cfg.n_items,
+                      locality=locality)
+    c = make_cluster("LILAC-TM-ST", wl, cfg)
+    if fail_at is not None:
+        c.events.schedule(fail_at, lambda: c.gcs.fail(3))
+    freed = []
+    orig = c.gcs.ur_broadcast
+
+    def wrap(msg, *a, **k):
+        freed.append(repr(msg))
+        return orig(msg, *a, **k)
+
+    c.gcs.ur_broadcast = wrap
+    m = c.run()
+    return dict(commits=m.commits, aborts=m.aborts, forwards=m.forwards,
+                commit_times=tuple(m.commit_times), freed=tuple(freed),
+                owners=[r.lm.owner_view() for r in c.replicas])
+
+
+@pytest.mark.parametrize("kw", [
+    dict(),
+    dict(fail_at=120.0, jax_min=1),
+])
+def test_full_sim_batched_is_byte_identical(kw):
+    """End to end: commits, aborts, forwards, commit times, the UR-broadcast
+    freed stream and every replica's owner view match the sequential oracle
+    — with and without a mid-run node failure."""
+    assert _run_sim("sequential", **kw) == _run_sim("batched", **kw)
+
+
+def test_pipelined_handoff_runs_batched_and_matches_oracle():
+    """Zeus-style pipelined handoff composes with the batched control plane:
+    the sim commits work and stays byte-identical to the sequential manager
+    under the same handoff mode."""
+    a = _run_sim("sequential", handoff="pipelined")
+    b = _run_sim("batched", handoff="pipelined")
+    assert a == b
+    assert b["commits"] > 0
+
+
+def test_batched_is_the_default_lease_mode():
+    assert SimConfig().lease_mode == "batched"
+
+
+# ---------------------------------------------------------------------------
+# Satellite regressions: planner purge, router tombstones, engine eviction
+# ---------------------------------------------------------------------------
+
+def test_planner_purge_node_drops_ghost_state():
+    """S1 regression: after a view change the planner keeps no trace of the
+    dead node — no affinity pull toward it, no history entries gating live
+    moves against it."""
+    from repro.plan.planner import PlacementPlanner, PlanConfig
+
+    p = PlacementPlanner(3, 8, PlanConfig(min_events=1.0))
+    for t in (1.0, 2.0, 3.0):
+        p.affinity.record_commit(t, 1, (2, 5))
+        p.affinity.record_commit(t, 0, (3,))
+    p._history.append((0, 2, 0, 1))      # class 2 moved 0 -> 1 (dead dst)
+    p._history.append((0, 3, 1, 2))      # class 3 moved 1 -> 2 (dead src)
+    p._history.append((0, 4, 0, 2))      # survivor entry
+    p.purge_node(1)
+    assert not p.affinity.node.counts[1].any()
+    assert not p.affinity.aborts.counts[1].any()
+    assert list(p._history) == [(0, 4, 0, 2)]
+    p.purge_node(1)                      # idempotent (every replica calls it)
+    assert list(p._history) == [(0, 4, 0, 2)]
+
+
+def test_router_evict_tombstones_and_recycles():
+    """S3 regression: an evicted sid's stale epoch can never certify again,
+    and the recycled sid's first placement starts above the tombstone."""
+    from repro.serve.certifier import StepCertifier
+    from repro.serve.engine import Request
+    from repro.serve.router import LocalityRouter
+
+    r = LocalityRouter(2, policy="short")
+    cert = StepCertifier(2, jax_min=1)
+    dec = r.route(0, 5, 0)               # first placement
+    cert.bump(5, dec.epoch)
+    stale_epoch = dec.epoch
+    tomb = r.evict(5)
+    cert.purge(5)
+    cert.bump(5, tomb)
+    assert tomb > stale_epoch
+    assert 5 not in r.lease_epoch        # live dict holds live sessions only
+    # a forward of the dead tenancy still on the wire fails certification
+    cert.enqueue(0, Request(sid=5, origin=1), stale_epoch)
+    passed, aborted, _ = cert.drain(0)
+    assert passed == [] and len(aborted) == 1
+    # the recycled sid places above the tombstone: no aliasing possible
+    dec2 = r.route(1, 5, 0)
+    assert dec2.epoch > tomb >= stale_epoch
+
+
+def test_router_compacts_stat_columns_after_mass_eviction():
+    """S3 regression: a burst of high sids must not pin the per-session
+    stat matrix after the sessions are gone (pow2 + 4x hysteresis)."""
+    from repro.serve.router import LocalityRouter
+
+    r = LocalityRouter(2, policy="short")
+    for sid in range(1500):
+        r.route(sid % 2, sid, 0)
+    assert r.freq.n_cols >= 2048
+    for sid in range(1, 1500):
+        r.evict(sid)
+    assert max(r.owner) == 0
+    assert r.freq.n_cols <= 512          # shrunk back toward the floor
+    # and the survivor's state is intact
+    assert r.owner[0] in (0, 1)
+
+
+def test_decayed_frequency_shrink_preserves_live_columns():
+    from repro.core.stats import DecayedFrequency
+
+    f = DecayedFrequency(2, 64, grow_cols=True)
+    f.record(1.0, 0, (900,))
+    f.record(1.0, 1, (3,))
+    assert f.n_cols >= 1024
+    f.shrink_to(4)
+    assert f.n_cols == 64                # pow2(4) = 4, floored at 64
+    assert f.counts[1, 3] > 0            # live column survived
+    f2 = DecayedFrequency(2, 8)          # fixed width: shrink is a no-op
+    f2.shrink_to(1)
+    assert f2.n_cols == 8
+
+
+def test_engine_evict_session_retires_everywhere():
+    """S3 regression: evict_session drops the cache column, queued work and
+    pending forwards, and a resubmitted (recycled) sid starts a fresh
+    tenancy with an epoch above the tombstone."""
+    from repro.configs import get_smoke_config
+    from repro.serve.engine import MultiPodEngine, Request, SimBackend
+    from repro.serve.router import LocalityRouter
+
+    cfg = get_smoke_config("glm4-9b")
+    eng = MultiPodEngine(2, SimBackend(cfg), LocalityRouter(2, policy="short"))
+    eng.submit(Request(sid=7, origin=0, n_tokens=4))
+    eng.run_step()
+    eng.submit(Request(sid=7, origin=1, n_tokens=4))   # forward or acquire
+    assert 7 in eng.session_home
+    old_epoch = eng.router.lease_epoch[7]
+    eng.evict_session(7)
+    assert 7 not in eng.session_home and 7 not in eng.session_len
+    assert all(all(r.sid != 7 for r in q) for q in eng.queues)
+    assert not eng.certifier.has_pending()
+    assert 7 not in eng.router.owner
+    # recycled tenancy: placement epoch strictly above the old one
+    dec = eng.submit(Request(sid=7, origin=1, n_tokens=2))
+    assert dec.epoch > old_epoch
+    eng.drain()
