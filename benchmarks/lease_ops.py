@@ -158,24 +158,29 @@ def run_protocol(mgrs, schedule, *, batched: bool) -> Dict:
 
 
 def bench_mode(mode: str, n_nodes: int, n_classes: int, schedule,
-               *, shards: int, jax_min: int) -> Tuple[Dict, float]:
+               *, shards: int, jax_min: int) -> Tuple[Dict, float, list]:
     def fresh():
-        if mode == "batched":
-            return [ShardedLeaseManager(n, n_classes, n_shards=shards,
-                                        jax_min=jax_min)
-                    for n in range(n_nodes)]
-        return [FGLLeaseManager(n, n_classes) for n in range(n_nodes)]
+        if mode == "sequential":
+            return [FGLLeaseManager(n, n_classes) for n in range(n_nodes)]
+        mgrs = [ShardedLeaseManager(n, n_classes, n_shards=shards,
+                                    jax_min=jax_min)
+                for n in range(n_nodes)]
+        if mode == "sanitized":
+            from repro.analysis.sanitizer import LeaseSanitizer
 
-    if mode == "batched":
+            mgrs = [LeaseSanitizer(m) for m in mgrs]
+        return mgrs
+
+    if mode != "sequential":
         # warm the jit caches on one throwaway full run: every (pow2 class
         # count, waiter bucket) shape the schedule produces compiles here,
         # so the timed run measures steady-state dispatch only
         run_protocol(fresh(), schedule, batched=True)
     mgrs = fresh()
     t0 = time.perf_counter()
-    trace = run_protocol(mgrs, schedule, batched=(mode == "batched"))
+    trace = run_protocol(mgrs, schedule, batched=(mode != "sequential"))
     dt = time.perf_counter() - t0
-    return trace, dt
+    return trace, dt, mgrs
 
 
 def main(argv=None) -> Dict:
@@ -189,11 +194,16 @@ def main(argv=None) -> Dict:
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="BENCH_lease_ops.json")
     ap.add_argument("--smoke", action="store_true",
-                    help="reduced schedule for CI: 128k classes, 3 rounds")
+                    help="reduced schedule for CI: 128k classes, 3 rounds "
+                         "(implies --sanitize)")
     ap.add_argument("--check", action="store_true",
                     help="fail unless batched >= 10x sequential ops/s")
+    ap.add_argument("--sanitize", action="store_true",
+                    help="also run the batched manager under the protocol "
+                         "sanitizer and report its overhead")
     args = ap.parse_args(argv)
     if args.smoke:
+        args.sanitize = True
         # the instant must stay drain-window sized: the >=10x floor is an
         # asymptotic claim (the oracle's born-blocked scan is O(batch) per
         # own enqueue), so tiny batches would measure dispatch overhead
@@ -206,9 +216,17 @@ def main(argv=None) -> Dict:
     print("mode,ops,ops_per_s,wall_s,finished")
     rows = []
     traces = {}
-    for mode in ("sequential", "batched"):
-        trace, dt = bench_mode(mode, args.n_nodes, args.n_classes, schedule,
-                               shards=args.shards, jax_min=args.jax_min)
+    modes = ["sequential", "batched"] + (["sanitized"] if args.sanitize
+                                         else [])
+    for mode in modes:
+        trace, dt, mgrs = bench_mode(
+            mode, args.n_nodes, args.n_classes, schedule,
+            shards=args.shards, jax_min=args.jax_min)
+        if mode == "sanitized":
+            # end-of-run reconciliation rides the sanitized cell: queue
+            # contents == ledger, every LOR accounted for
+            for m in mgrs:
+                m.verify_full()
         traces[mode] = trace
         rows.append({"mode": mode, "ops": trace["ops"],
                      "ops_per_s": trace["ops"] / dt, "wall_s": dt,
@@ -216,13 +234,22 @@ def main(argv=None) -> Dict:
         print(f"{mode},{trace['ops']},{trace['ops'] / dt:.0f},{dt:.3f},"
               f"{trace['finished']}", flush=True)
 
-    # the speedup is only meaningful on a byte-identical execution
+    # the speedup is only meaningful on a byte-identical execution — and
+    # the sanitizer, a pure observer, must not perturb it either
     a, b = traces["sequential"], traces["batched"]
     assert a["freed_log"] == b["freed_log"], "freed streams diverge"
     assert a["finished"] == b["finished"] and a["waiting"] == b["waiting"]
     for oa, ob in zip(a["owners"], b["owners"]):
         np.testing.assert_array_equal(oa, ob)
+    if "sanitized" in traces:
+        s = traces["sanitized"]
+        assert s["freed_log"] == b["freed_log"], \
+            "sanitizer perturbed the freed stream"
+        assert s["finished"] == b["finished"] and s["waiting"] == b["waiting"]
+        for oa, ob in zip(s["owners"], b["owners"]):
+            np.testing.assert_array_equal(oa, ob)
 
+    # the CI-gated floor is measured on the UNsanitized batched row
     speedup = rows[1]["ops_per_s"] / rows[0]["ops_per_s"]
     out = {
         "bench": "lease_ops",
@@ -233,6 +260,10 @@ def main(argv=None) -> Dict:
         "batched_speedup": speedup,
         "rows": rows,
     }
+    if args.sanitize:
+        out["sanitize_overhead"] = rows[2]["wall_s"] / rows[1]["wall_s"]
+        print(f"sanitize overhead: {out['sanitize_overhead']:.2f}x "
+              f"over batched")
     print(f"batched speedup: {speedup:.2f}x")
     with open(args.out, "w") as f:
         json.dump(out, f, indent=2)

@@ -1,0 +1,25 @@
+"""repro.analysis — mechanical checks for the lease/certification stack.
+
+Two engines:
+
+* :mod:`repro.analysis.lint` — AST-based static rules over the source tree
+  (host syncs in jit bodies, id-dtype discipline, ops<->ref parity,
+  protocol-state mutation, static_argnames hygiene, pow2 padding).
+  Stdlib-only; runnable as ``python -m repro.analysis.lint``.
+* :mod:`repro.analysis.sanitizer` — runtime lease-protocol invariant
+  checker (``SimConfig.sanitize=True`` / ``StepCertifier(sanitize=True)``)
+  asserting Algorithm 1's invariants per delivery instant.
+
+The sanitizer import is deferred so the lint CLI never pulls in numpy.
+"""
+from __future__ import annotations
+
+__all__ = ["LeaseSanitizer", "SanitizerError", "check_write_locks"]
+
+
+def __getattr__(name):
+    if name in __all__:
+        from . import sanitizer
+
+        return getattr(sanitizer, name)
+    raise AttributeError(name)

@@ -1,0 +1,116 @@
+"""Shared AST helpers for the lint rules (stdlib-only by design)."""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional
+
+# name tokens that mark an array as carrying protocol identifiers
+# (conflict classes, sessions, queue slots, requests, replicas, items)
+ID_TOKENS = {"cc", "sid", "slot", "req", "rid", "proc", "owner", "item",
+             "cls", "lor"}
+
+
+def is_id_name(name: Optional[str]) -> bool:
+    """True if ``name`` reads like a protocol-id binding (``ccs_l``,
+    ``head_rid``, ``_item_cc``, ...)."""
+    if not name:
+        return False
+    for tok in name.lower().split("_"):
+        if tok in ID_TOKENS or (tok.endswith("s") and tok[:-1] in ID_TOKENS):
+            return True
+    return False
+
+
+def is_jit_name(e: ast.expr) -> bool:
+    return (isinstance(e, ast.Attribute) and e.attr == "jit") or (
+        isinstance(e, ast.Name) and e.id == "jit")
+
+
+def jit_decorator(dec: ast.expr) -> bool:
+    """True when ``dec`` puts the decorated body under jax.jit tracing:
+    ``@jax.jit``, ``@jax.jit(...)`` or ``@functools.partial(jax.jit, ...)``."""
+    if is_jit_name(dec):
+        return True
+    if isinstance(dec, ast.Call):
+        if is_jit_name(dec.func):
+            return True
+        f = dec.func
+        is_partial = (isinstance(f, ast.Attribute) and f.attr == "partial") \
+            or (isinstance(f, ast.Name) and f.id == "partial")
+        if is_partial and dec.args and is_jit_name(dec.args[0]):
+            return True
+    return False
+
+
+def jit_functions(tree: ast.AST) -> List[ast.FunctionDef]:
+    """Function defs whose bodies are traced under jax.jit — decorated
+    directly, or wrapped module-side via ``g = jax.jit(f)``."""
+    out: List[ast.FunctionDef] = []
+    wrapped: List[tuple] = []          # (name, lineno of the jit call)
+    defs: List[ast.FunctionDef] = []
+    for node in ast.walk(tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            defs.append(node)
+            if any(jit_decorator(d) for d in node.decorator_list):
+                out.append(node)
+        elif isinstance(node, ast.Call) and is_jit_name(node.func):
+            if node.args and isinstance(node.args[0], ast.Name):
+                wrapped.append((node.args[0].id, node.lineno))
+    done = {id(f) for f in out}
+    for name, call_line in wrapped:
+        # nearest preceding def wins: `jax.jit(step)` refers to the local
+        # `step` above it, not a later same-named method
+        cands = [f for f in defs
+                 if f.name == name and f.lineno <= call_line]
+        if cands:
+            f = max(cands, key=lambda f: f.lineno)
+            if id(f) not in done:
+                done.add(id(f))
+                out.append(f)
+    return out
+
+
+def call_name(node: ast.Call) -> str:
+    """Dotted callee name: ``np.full(...)`` -> ``"np.full"`` ('' if exotic)."""
+    f = node.func
+    parts: List[str] = []
+    while isinstance(f, ast.Attribute):
+        parts.append(f.attr)
+        f = f.value
+    if isinstance(f, ast.Name):
+        parts.append(f.id)
+    elif parts:
+        parts.append("?")
+    return ".".join(reversed(parts))
+
+
+def kwarg(node: ast.Call, name: str) -> Optional[ast.expr]:
+    for kw in node.keywords:
+        if kw.arg == name:
+            return kw.value
+    return None
+
+
+def assign_targets(tree: ast.AST) -> Dict[int, str]:
+    """Map id(call-node) -> the simple name it is assigned to, for calls
+    (possibly nested) on the RHS of single-target assignments."""
+    out: Dict[int, str] = {}
+    for node in ast.walk(tree):
+        tgt = None
+        if isinstance(node, ast.Assign) and len(node.targets) == 1:
+            tgt = node.targets[0]
+        elif isinstance(node, (ast.AnnAssign, ast.AugAssign)):
+            tgt = node.target
+        value = getattr(node, "value", None)
+        if tgt is None or value is None:
+            continue
+        if isinstance(tgt, ast.Name):
+            name = tgt.id
+        elif isinstance(tgt, ast.Attribute):
+            name = tgt.attr
+        else:
+            continue
+        for sub in ast.walk(value):
+            if isinstance(sub, ast.Call):
+                out[id(sub)] = name
+    return out

@@ -1,0 +1,14 @@
+"""Lint rule registry.  Each module exposes a RULE with id/doc/check."""
+from __future__ import annotations
+
+from . import (host_sync, id_dtype, jit_static, ops_ref, pow2_pad,
+               state_mut)
+
+ALL_RULES = [
+    host_sync.RULE,
+    id_dtype.RULE,
+    ops_ref.RULE,
+    state_mut.RULE,
+    jit_static.RULE,
+    pow2_pad.RULE,
+]

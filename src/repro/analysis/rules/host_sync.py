@@ -1,0 +1,65 @@
+"""host-sync: no host synchronization inside jax.jit bodies.
+
+Guards the hot paths (kernels/, plan/score.py) against the dispatch-stall
+bug class: a numpy call, ``.item()``/``.tolist()``/``.block_until_ready()``,
+or ``float()``/``int()``/``bool()`` on a traced value forces a device sync
+per call, and environment queries (``jax.default_backend()``) silently bake
+host state into the trace.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from .. import astutil
+from ..lint import FileCtx, Violation
+
+NP_ROOTS = {"np", "numpy", "onp"}
+HOST_ATTR_CALLS = {"item", "tolist", "block_until_ready",
+                   "copy_to_host_async"}
+ENV_QUERIES = {"jax.default_backend", "jax.devices", "jax.device_get",
+               "jax.device_put", "jax.local_devices"}
+CAST_BUILTINS = {"float", "int", "bool"}
+
+
+class Rule:
+    id = "host-sync"
+    doc = ("no numpy calls, .item()/.tolist()/.block_until_ready(), "
+           "float()/int()/bool() on tracers, or environment queries inside "
+           "jax.jit bodies")
+
+    def check(self, ctx: FileCtx) -> List[Violation]:
+        out: List[Violation] = []
+        for fn in astutil.jit_functions(ctx.tree):
+            for node in ast.walk(fn):
+                if not isinstance(node, ast.Call):
+                    continue
+                name = astutil.call_name(node)
+                root = name.split(".")[0]
+                if root in NP_ROOTS and "." in name:
+                    out.append(ctx.violation(
+                        node, self.id,
+                        f"numpy call {name}() inside jit body '{fn.name}'"))
+                elif name in ENV_QUERIES:
+                    out.append(ctx.violation(
+                        node, self.id,
+                        f"{name}() inside jit body '{fn.name}' bakes host "
+                        f"environment state into the trace"))
+                elif isinstance(node.func, ast.Attribute) \
+                        and node.func.attr in HOST_ATTR_CALLS:
+                    out.append(ctx.violation(
+                        node, self.id,
+                        f".{node.func.attr}() inside jit body '{fn.name}' "
+                        f"forces a device sync"))
+                elif isinstance(node.func, ast.Name) \
+                        and node.func.id in CAST_BUILTINS and node.args \
+                        and not all(isinstance(a, ast.Constant)
+                                    for a in node.args):
+                    out.append(ctx.violation(
+                        node, self.id,
+                        f"{node.func.id}() on a traced value inside jit "
+                        f"body '{fn.name}'"))
+        return out
+
+
+RULE = Rule()

@@ -1,0 +1,69 @@
+"""static-args: static_argnames hygiene on jit decorators.
+
+A ``static_argnames`` entry that names no real parameter is silently
+ignored by jax — the intended-static argument then retraces (or fails to
+hash) per call.  A static parameter with an unhashable default raises only
+on the first defaulted call, usually in production.
+"""
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from .. import astutil
+from ..lint import FileCtx, Violation
+
+
+def _static_names(sa: ast.expr) -> List[str]:
+    if isinstance(sa, ast.Constant) and isinstance(sa.value, str):
+        return [sa.value]
+    if isinstance(sa, (ast.Tuple, ast.List, ast.Set)):
+        return [e.value for e in sa.elts
+                if isinstance(e, ast.Constant) and isinstance(e.value, str)]
+    return []
+
+
+class Rule:
+    id = "static-args"
+    doc = ("static_argnames entries must name real parameters, and "
+           "statically-marked parameters need hashable defaults")
+
+    def check(self, ctx: FileCtx) -> List[Violation]:
+        out: List[Violation] = []
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            for dec in node.decorator_list:
+                if not (isinstance(dec, ast.Call)
+                        and astutil.jit_decorator(dec)):
+                    continue
+                sa = astutil.kwarg(dec, "static_argnames")
+                if sa is None:
+                    continue
+                a = node.args
+                params = {p.arg for p in a.args + a.posonlyargs
+                          + a.kwonlyargs}
+                defaults = {}
+                pos = a.posonlyargs + a.args
+                for p, d in zip(pos[len(pos) - len(a.defaults):],
+                                a.defaults):
+                    defaults[p.arg] = d
+                for p, d in zip(a.kwonlyargs, a.kw_defaults):
+                    if d is not None:
+                        defaults[p.arg] = d
+                for name in _static_names(sa):
+                    if name not in params:
+                        out.append(ctx.violation(
+                            dec, self.id,
+                            f"static_argnames entry '{name}' is not a "
+                            f"parameter of '{node.name}'"))
+                    elif isinstance(defaults.get(name),
+                                    (ast.List, ast.Dict, ast.Set)):
+                        out.append(ctx.violation(
+                            dec, self.id,
+                            f"static parameter '{name}' of '{node.name}' "
+                            f"has an unhashable default"))
+        return out
+
+
+RULE = Rule()

@@ -159,6 +159,11 @@ class SimConfig:
     # moves every plan.epoch_ms of simulated time and execute them as
     # background prefetch requests through the lease managers (None = off).
     plan: Optional["PlanConfig"] = None
+    # Lease-protocol sanitizer (repro.analysis): wrap every replica's lease
+    # manager in the invariant-checking observer and cross-check the
+    # certification write-lock inputs.  Pure post-state reads — a
+    # sanitize-on run is byte-identical to sanitize-off, just slower.
+    sanitize: bool = False
 
 
 @dataclass
@@ -208,6 +213,10 @@ class Replica:
             self.lm = FGLLeaseManager(node, cfg.n_classes)
         else:
             self.lm = ALCLeaseManager(node, cfg.n_classes)
+        if cfg.sanitize:
+            from repro.analysis.sanitizer import LeaseSanitizer
+
+            self.lm = LeaseSanitizer(self.lm)
         self.store = VersionedStore(cfg.n_items, cfg.init_value)
         self.freq = DecayedFrequency(cfg.n_nodes, cfg.n_classes)
         self.cpu_view = np.zeros((cfg.n_nodes,), dtype=np.float64)
@@ -274,7 +283,7 @@ class Cluster:
         if hasattr(self.ccmap, "of_item"):
             self._item_cc = np.fromiter(
                 (self.ccmap.of_item(i) for i in range(cfg.n_items)),
-                np.int64, count=cfg.n_items)
+                np.int32, count=cfg.n_items)
         else:
             self._item_cc = None
         # proactive placement planner (repro.plan): a global control loop
@@ -311,6 +320,11 @@ class Cluster:
         self.events.run(cfg.duration_ms)
         self._stopped = True
         self.events.run(cfg.duration_ms + cfg.drain_ms)
+        if cfg.sanitize:
+            # end-of-run reconciliation: queues == ledger, LORs conserved
+            for r in self.replicas:
+                if self.gcs.alive(r.node):
+                    r.lm.verify_full()
         return self.metrics
 
     def throughput(self) -> float:
@@ -720,9 +734,9 @@ class Cluster:
         batch, r.certify_queue = r.certify_queue, []
         if not batch:
             return
+        locks = self._write_locks(node)
         if len(batch) >= self.cfg.certify_jax_min:
-            ok = validate_batch(
-                r.store, [t.stm for t in batch], locks=self._write_locks(node))
+            ok = validate_batch(r.store, [t.stm for t in batch], locks=locks)
         else:
             # near-empty batch: JAX dispatch overhead would dominate — the
             # numpy loop settles the same verdicts, including the lock
@@ -730,6 +744,15 @@ class Cluster:
             # transactions happened to share the drain instant
             ok = [r.store.validate(t.stm) and not self._locked_write(t, node)
                   for t in batch]
+        if self.cfg.sanitize:
+            # single-writer cross-check: the locks input must match the
+            # lease layer's live ownership, and no passing transaction may
+            # write an item leased elsewhere
+            from repro.analysis.sanitizer import check_write_locks
+
+            check_write_locks(
+                node, r.lm.owner_np(), self._item_cc, locks,
+                [t.stm for t in batch], [bool(o) for o in ok])
         self.metrics.cert_batches += 1
         self.metrics.cert_batch_txns += len(batch)
         # Intra-batch serialization: the one-at-a-time path applies each
@@ -888,6 +911,10 @@ class Cluster:
                 # piggybackable, freed by the usual rule the moment a
                 # conflicting request blocks them
                 if lors:
+                    if self.cfg.sanitize:
+                        # prefetch-head rule: these LORs may only drain to
+                        # activeXacts=0 while heading their queues
+                        r.lm.mark_prefetch(lors)
                     r.prefetch_waiters.append(lors)
             else:
                 txn = r.pending_reqs.pop(req.req_id, None)

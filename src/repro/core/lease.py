@@ -127,11 +127,12 @@ class LeaseManagerBase:
         return all(self.head_owner(cc) == self.proc for cc in ccs)
 
     def owner_np(self) -> np.ndarray:
-        """Ownership vector as an int64 array (-1: unowned) — the shape the
-        certification kernel's write-lock derivation consumes."""
+        """Ownership vector as an int32 array (-1: unowned) — the shape the
+        certification kernel's write-lock derivation consumes (ids are
+        int32 end to end; see the id-dtype lint rule)."""
         return np.fromiter(
             (self.head_owner(cc) for cc in range(self.n_classes)),
-            np.int64, count=self.n_classes)
+            np.int32, count=self.n_classes)
 
     def has_unblocked(self, cc: int, proc: int) -> bool:
         """True iff ``proc`` has an unblocked LOR anywhere in ``cc``'s queue

@@ -366,7 +366,7 @@ class ShardedLeaseManager:
     def owner_np(self) -> np.ndarray:
         """L(i, x) ownership vector as one gather (-1: unowned)."""
         _, head_proc, _, qlen = self._head_state()
-        return np.where(qlen > 0, head_proc, -1).astype(np.int64)
+        return np.where(qlen > 0, head_proc, -1).astype(np.int32)
 
     def owner_view(self) -> List[int]:
         return self.owner_np().tolist()

@@ -81,9 +81,28 @@ class VersionedStore:
 
     def __init__(self, n_items: int, init_value: float = 0.0) -> None:
         self.n_items = n_items
+        self.init_value = init_value
         self.values = np.full((n_items,), init_value, dtype=np.float64)
         self.versions = np.zeros((n_items,), dtype=np.int64)
         self.clock = 0  # global version clock (per replica copy)
+
+    def grow_to(self, n: int) -> None:
+        """Grow capacity to at least ``n`` items (power-of-two steps),
+        preserving contents.  The supported way for consumers to extend a
+        store — direct writes to values/versions outside this module are
+        lint-gated (state-mutation rule)."""
+        if n <= self.n_items:
+            return
+        cap = max(1, self.n_items)
+        while cap < n:
+            cap *= 2
+        values = np.full((cap,), self.init_value, dtype=np.float64)
+        versions = np.zeros((cap,), dtype=np.int64)
+        values[: self.n_items] = self.values
+        versions[: self.n_items] = self.versions
+        self.values = values
+        self.versions = versions
+        self.n_items = cap
 
     # -- execution-side API -------------------------------------------------
     def read(self, txn: Transaction, item: int) -> float:

@@ -152,6 +152,8 @@ def flash_attention(
             _vmem((bq,), jnp.float32),
             _vmem((bq, dv), jnp.float32),
         ],
+        # lint: allow(host-sync): trace-time backend probe — picks the
+        # interpret path off-TPU; retracing on backend change is intended
         interpret=interpret or (jax.default_backend() != "tpu"),
     )(qp, kp, qt, kt, vt)
     out = jnp.moveaxis(out, 1, 2)

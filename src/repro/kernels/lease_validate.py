@@ -117,6 +117,8 @@ def lease_validate(
         out_specs=pl.BlockSpec((bt,), lambda ib, ic: (ib,)),
         out_shape=jax.ShapeDtypeStruct((read_items.shape[0],), jnp.bool_),
         scratch_shapes=[_vmem((bt,), jnp.int32)],
+        # lint: allow(host-sync): trace-time backend probe — picks the
+        # interpret path off-TPU; retracing on backend change is intended
         interpret=interpret or (jax.default_backend() != "tpu"),
     )(read_items, read_versions, write_items, store_versions, write_locks)
     return ok[:b]

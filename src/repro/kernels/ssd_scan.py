@@ -122,6 +122,8 @@ def ssd_scan(
             jax.ShapeDtypeStruct((bsz, h, p, n), jnp.float32),
         ],
         scratch_shapes=[_vmem((hb, p, n), jnp.float32)],
+        # lint: allow(host-sync): trace-time backend probe — picks the
+        # interpret path off-TPU; retracing on backend change is intended
         interpret=interpret or (jax.default_backend() != "tpu"),
     )(x, dt, a, b_mat, c_mat, h0)
     return y, hout

@@ -55,11 +55,18 @@ class StepCertifier:
     def __init__(self, n_pods: int, *, backend: str = "auto",
                  hbm_bw: float = HBM_BW,
                  dispatch_s: float = CERT_DISPATCH_S,
-                 jax_min: int = 8) -> None:
+                 jax_min: int = 8, sanitize: bool = False,
+                 owner_of=None) -> None:
         self.n_pods = n_pods
         self.backend = backend
         self.hbm_bw = hbm_bw
         self.dispatch_s = dispatch_s
+        # protocol sanitizer (repro.analysis): epoch monotonicity per sid
+        # and owner-at-drain cross-checks; ``owner_of(sid) -> pod`` is wired
+        # by the engine from the router's ownership map
+        self.sanitize = sanitize
+        self.owner_of = owner_of
+        self._last_epoch: Dict[int, int] = {}
         # batches below this settle with the numpy loop (same verdicts,
         # no JAX dispatch overhead); tests force 1 to pin the packed path
         self.jax_min = jax_min
@@ -80,17 +87,7 @@ class StepCertifier:
 
     # -- epoch store ---------------------------------------------------------
     def _ensure(self, sid: int) -> None:
-        n = self.store.n_items
-        if sid < n:
-            return
-        while n <= sid:
-            n *= 2
-        values = np.zeros((n,), dtype=np.float64)
-        versions = np.zeros((n,), dtype=np.int64)
-        values[: self.store.n_items] = self.store.values
-        versions[: self.store.n_items] = self.store.versions
-        self.store.values, self.store.versions = values, versions
-        self.store.n_items = n
+        self.store.grow_to(sid + 1)
 
     def epoch(self, sid: int) -> int:
         self._ensure(sid)
@@ -102,6 +99,17 @@ class StepCertifier:
         to the next store read; ordering within the queue is preserved —
         ``apply_batch`` is last-writer-wins per item)."""
         self._ensure(sid)
+        if self.sanitize:
+            prev = self._last_epoch.get(sid)
+            if prev is not None and epoch < prev:
+                from repro.analysis.sanitizer import SanitizerError
+
+                raise SanitizerError(
+                    "epoch-monotonicity",
+                    f"sid {sid}: lease epoch stamped backwards "
+                    f"({prev} -> {epoch}); a recycled sid must start past "
+                    f"its tombstone epoch")
+            self._last_epoch[sid] = epoch
         self._bumps.append((sid, epoch))
 
     def _flush_bumps(self) -> None:
@@ -176,6 +184,20 @@ class StepCertifier:
         m.time_s += t_s
         passed = [req for (req, _), o in zip(entries, ok) if o]
         aborted = [req for (req, _), o in zip(entries, ok) if not o]
+        if self.sanitize and self.owner_of is not None:
+            from repro.analysis.sanitizer import SanitizerError
+
+            for req in passed:
+                owner = self.owner_of(req.sid)
+                if owner != pod:
+                    # a request can only certify at the current lease
+                    # owner: passing elsewhere means an ownership move
+                    # skipped its epoch bump
+                    raise SanitizerError(
+                        "owner-at-drain",
+                        f"sid {req.sid} certified at pod {pod} but the "
+                        f"router owner is {owner}; an apply_move/evict "
+                        f"skipped its epoch bump")
         m.certified += len(passed)
         m.aborts += len(aborted)
         return passed, aborted, t_s

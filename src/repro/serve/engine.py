@@ -197,13 +197,17 @@ class EngineMetrics:
 class MultiPodEngine:
     def __init__(self, n_pods: int, backend, router: LocalityRouter,
                  certifier: Optional[StepCertifier] = None,
-                 planner=None) -> None:
+                 planner=None, sanitize: bool = False) -> None:
         self.n_pods = n_pods
         self.backend = backend
         self.router = router
         # forwarded requests are certified at the owning pod in one batch
         # per engine step (the paper's commit phase at the lease owner)
-        self.certifier = certifier or StepCertifier(n_pods)
+        self.certifier = certifier or StepCertifier(n_pods, sanitize=sanitize)
+        if self.certifier.sanitize and self.certifier.owner_of is None:
+            # owner-at-drain cross-check reads the router's live ownership
+            self.certifier.owner_of = \
+                lambda sid: self.router.owner.get(sid, -1)
         # optional proactive placement planner (repro.plan): shares the
         # router's clock/stats implementation and takes over rebalancing
         self.planner = planner

@@ -106,6 +106,33 @@ def test_lease_validate_vs_ref(B, R, W, n_items, chunk, bt):
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
+@pytest.mark.parametrize("B,R,W,n_items", [(32, 8, 4, 512), (8, 4, 2, 64)])
+def test_validate_transactions_backends_agree(B, R, W, n_items):
+    """ops.validate_transactions: the dispatch point's pallas(interpret)
+    and jit'd-ref paths agree bitwise, locks honored on both."""
+    from repro.kernels.ops import validate_transactions
+    store = jnp.asarray(RNG.integers(0, 40, n_items), jnp.int32)
+    locks = jnp.asarray(RNG.random(n_items) < 0.1, jnp.int32)
+    items = jnp.asarray(RNG.integers(-1, n_items, (B, R)), jnp.int32)
+    vers = jnp.where(jnp.asarray(RNG.random((B, R)) < 0.8),
+                     store[jnp.clip(items, 0, n_items - 1)],
+                     jnp.asarray(RNG.integers(0, 40, (B, R)), jnp.int32))
+    witems = jnp.asarray(RNG.integers(-1, n_items, (B, W)), jnp.int32)
+    kern = validate_transactions(store, items, vers, write_locks=locks,
+                                 write_items=witems, backend="pallas")
+    ref_out = validate_transactions(store, items, vers, write_locks=locks,
+                                    write_items=witems, backend="jnp")
+    want = ref.lease_validate_ref(store, items, vers, locks > 0, witems)
+    np.testing.assert_array_equal(np.asarray(kern), np.asarray(want))
+    np.testing.assert_array_equal(np.asarray(ref_out), np.asarray(want))
+    # lock-free default: all-zero locks
+    base = validate_transactions(store, items, vers, backend="jnp")
+    want_nolock = ref.lease_validate_ref(
+        store, items, vers, jnp.zeros_like(store) > 0,
+        jnp.full((B, 1), -1, jnp.int32))
+    np.testing.assert_array_equal(np.asarray(base), np.asarray(want_nolock))
+
+
 def test_stm_batched_validation_matches_kernel():
     """The STM's jnp batched validation, the kernel, and the python loop agree."""
     from repro.core.stm import Transaction, VersionedStore, pack_read_sets, validate_batch

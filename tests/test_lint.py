@@ -1,0 +1,266 @@
+"""Unit tests for repro.analysis.lint: each rule fires on a distilled
+repro of the bug class it encodes and stays quiet on the idiomatic form,
+plus the repo-wide gate (clean vs baseline; hot paths baseline-free)."""
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import lint as L
+from repro.analysis.rules import (ALL_RULES, host_sync, id_dtype, jit_static,
+                                  ops_ref, pow2_pad, state_mut)
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def _ctx(src, rel="src/repro/core/fake.py", project=None):
+    src = textwrap.dedent(src)
+    return L.FileCtx(Path(rel), rel, src, project or L.Project())
+
+
+def _rules(src, rule, **kw):
+    ctx = _ctx(src, **kw)
+    return ctx, L.apply_allows(ctx, rule.check(ctx))
+
+
+# ---------------------------------------------------------------------------
+# host-sync
+# ---------------------------------------------------------------------------
+
+def test_host_sync_flags_numpy_and_item_in_jit():
+    _, vs = _rules("""
+        import jax, numpy as np
+
+        @jax.jit
+        def f(x):
+            y = np.asarray(x)       # host round-trip
+            return float(y.sum()) + x.item()
+
+        def host_side(x):
+            return np.asarray(x)    # fine outside jit
+    """, host_sync.RULE)
+    assert len(vs) == 3
+    assert all(v.rule == "host-sync" for v in vs)
+
+
+def test_host_sync_sees_partial_and_wrapper_forms():
+    _, vs = _rules("""
+        import functools, jax
+
+        @functools.partial(jax.jit, static_argnames=("n",))
+        def f(x, n):
+            return jax.default_backend()
+
+        def g(x):
+            return jax.devices()
+
+        g = jax.jit(g)
+    """, host_sync.RULE)
+    assert len(vs) == 2
+
+
+def test_host_sync_allow_comment_needs_reason():
+    ok = """
+        import jax, numpy as np
+
+        @jax.jit
+        def f(x):
+            # lint: allow(host-sync): probe resolved at trace time on purpose
+            return np.asarray(x)
+    """
+    _, vs = _rules(ok, host_sync.RULE)
+    assert vs == []
+    _, vs = _rules(ok.replace(
+        ": probe resolved at trace time on purpose", ")").replace(
+        "allow(host-sync))", "allow(host-sync)"), host_sync.RULE)
+    assert len(vs) == 1 and "lacks a reason" in vs[0].msg
+
+
+def test_host_sync_allow_in_wrapped_comment_block():
+    _, vs = _rules("""
+        import jax, numpy as np
+
+        @jax.jit
+        def f(x):
+            # lint: allow(host-sync): this wrapped exemption spans two
+            # comment lines before the flagged statement
+            return np.asarray(x)
+    """, host_sync.RULE)
+    assert vs == []
+
+
+# ---------------------------------------------------------------------------
+# id-dtype
+# ---------------------------------------------------------------------------
+
+def test_id_dtype_flags_dtypeless_frombuffer():
+    _, vs = _rules("""
+        import numpy as np
+
+        def unpack(buf):
+            return np.frombuffer(buf)   # PR 4 bug: int64 view of int32 log
+    """, id_dtype.RULE)
+    assert len(vs) == 1 and "frombuffer" in vs[0].msg
+
+
+def test_id_dtype_flags_int64_id_arrays_only():
+    _, vs = _rules("""
+        import numpy as np
+
+        def build(n_items, ccs, sids):
+            cc_arr = np.asarray(ccs, np.int64)          # id: flagged
+            flat = np.fromiter(sids, np.int64)          # id data: flagged
+            versions = np.zeros((n_items,), np.int64)   # payload: fine
+            vals = np.asarray([1.0], np.float64)        # fine
+            return cc_arr, flat, versions, vals
+    """, id_dtype.RULE)
+    assert len(vs) == 2
+
+
+# ---------------------------------------------------------------------------
+# state-mutation
+# ---------------------------------------------------------------------------
+
+def test_state_mut_flags_foreign_writes_not_owner_files():
+    src = """
+        def grow(self, store, lm):
+            store.versions = store.versions + 1
+            lm.qlen[0] = 3
+            self.blocked = True          # plain attr, not a subscript cell
+    """
+    _, vs = _rules(src, state_mut.RULE)
+    assert len(vs) == 2
+    _, vs = _rules(src, state_mut.RULE, rel="src/repro/core/lease.py")
+    assert vs == []
+
+
+def test_state_mut_flags_tuple_target_writes():
+    _, vs = _rules("""
+        def swap(self):
+            self.store.values, self.store.versions = 1, 2
+    """, state_mut.RULE)
+    assert len(vs) == 2
+
+
+# ---------------------------------------------------------------------------
+# jit-static
+# ---------------------------------------------------------------------------
+
+def test_jit_static_flags_typo_and_unhashable_default():
+    _, vs = _rules("""
+        import functools, jax
+
+        @functools.partial(jax.jit, static_argnames=("chunk", "chunks"))
+        def f(x, chunk=64, shape=[1, 2]):
+            return x
+    """, jit_static.RULE)
+    msgs = "\n".join(v.msg for v in vs)
+    assert "chunks" in msgs            # not a parameter
+    assert "shape" not in msgs or True
+    _, vs2 = _rules("""
+        import functools, jax
+
+        @functools.partial(jax.jit, static_argnames=("shape",))
+        def f(x, shape=[1, 2]):
+            return x
+    """, jit_static.RULE)
+    assert any("unhashable" in v.msg for v in vs2)
+
+
+# ---------------------------------------------------------------------------
+# pow2-pad
+# ---------------------------------------------------------------------------
+
+def test_pow2_pad_flags_raw_len_alloc_feeding_dispatch():
+    _, vs = _rules("""
+        import numpy as np
+        from repro.kernels.ops import settle_lease_batch
+
+        def bad(groups):
+            wait_req = np.zeros((len(groups), 4), np.int32)
+            return settle_lease_batch(1, 2, 3, 4, 5, wait_req, 7, 8)
+
+        def good(groups, _pad_bucket):
+            b = _pad_bucket(len(groups))
+            wait_req = np.zeros((b, 4), np.int32)
+            return settle_lease_batch(1, 2, 3, 4, 5, wait_req, 7, 8)
+    """, pow2_pad.RULE)
+    assert len(vs) == 1 and "'bad'" in vs[0].msg   # 'good' is blessed
+
+
+# ---------------------------------------------------------------------------
+# ops<->ref parity
+# ---------------------------------------------------------------------------
+
+class _FakeProject(L.Project):
+    def __init__(self, ref_src, tests_src):
+        super().__init__()
+        self._ref = ref_src
+        self._tests_src = tests_src
+
+    def read_text(self, rel):
+        return self._ref if rel.endswith("ref.py") else None
+
+    def tests_text(self):
+        return self._tests_src
+
+
+def test_ops_ref_requires_twin_and_named_test():
+    ops_src = """
+        from . import ref
+
+        def covered(x):
+            return ref.covered_ref(x)
+
+        def untested(x):
+            return ref.untested_ref(x)
+
+        def twinless(x):
+            return x
+    """
+    ref_src = "def covered_ref(x):\n    return x\n\ndef untested_ref(x):\n    return x\n"
+    proj = _FakeProject(ref_src, "def test_covered():\n    covered(1)\n")
+    _, vs = _rules(ops_src, ops_ref.RULE,
+                   rel="src/repro/kernels/ops.py", project=proj)
+    msgs = "\n".join(v.msg for v in vs)
+    assert "covered" not in msgs.replace("untested", "")
+    assert "untested" in msgs and "twinless" in msgs
+
+
+# ---------------------------------------------------------------------------
+# Repo-wide gate
+# ---------------------------------------------------------------------------
+
+def test_repo_lints_clean_against_committed_baseline():
+    violations = L.lint_paths([L.DEFAULT_TARGET])
+    baseline = L.load_baseline(L.DEFAULT_BASELINE)
+    fresh = [v for v in violations if v.key not in baseline]
+    assert fresh == [], "\n".join(v.render() for v in fresh)
+    # no stale entries either: the baseline only carries live legacy debt
+    live = {v.key for v in violations}
+    assert baseline <= live
+
+
+def test_hot_paths_have_empty_baseline():
+    """kernels/ and plan/score.py violations must be fixed or inline-allowed
+    — the baseline is for legacy burn-down elsewhere, never the hot path."""
+    for key in L.load_baseline(L.DEFAULT_BASELINE):
+        path = key.split("::", 1)[0]
+        assert "/kernels/" not in path and not path.endswith("plan/score.py")
+
+
+def test_baseline_roundtrip(tmp_path):
+    vs = [L.Violation("a.py", 3, "r", "m"), L.Violation("b.py", 9, "r2", "m2")]
+    p = tmp_path / "b.txt"
+    assert L.write_baseline(p, vs) == 2
+    assert L.load_baseline(p) == {v.key for v in vs}
+    # keys are line-free: the same violation moved down the file still matches
+    assert L.Violation("a.py", 30, "r", "m").key in L.load_baseline(p)
+
+
+def test_cli_runs_clean_and_strict_mode_fails_on_injected(tmp_path):
+    assert L.main([]) == 0
+    bad = tmp_path / "bad.py"
+    bad.write_text("import numpy as np\nimport jax\n\n@jax.jit\n"
+                   "def f(x):\n    return np.asarray(x)\n")
+    assert L.main([str(bad), "--no-baseline"]) == 1
