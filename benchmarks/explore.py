@@ -1,0 +1,111 @@
+"""Schedule-space explorer throughput: schedules/s and reduction ratios.
+
+Runs the exploration grid the CI smoke job runs (plus, off-smoke, a larger
+sweep over commutation windows) and reports the model-checking economics:
+
+* ``schedules/s``       — completed re-executions per second;
+* ``states_deduped``    — continuations cut by the protocol-state
+  fingerprint (repro.analysis.fingerprint);
+* ``pruned_sleep``      — runs cut by sleep-set partial-order reduction;
+* ``reduction``         — naive enumeration runs / POR+dedup runs on the
+  same cell (how much of the interleaving space the reductions prove
+  redundant instead of executing).
+
+Informational benchmark: the artifact is NOT wired into the
+``benchmarks.run --check`` tolerance gates (wall-clock of a model checker
+is machine-noise); the correctness side lives in ``repro-explore --smoke
+--check`` and tests/test_explore*.py.  ``--check`` here enforces only the
+structural floor: every smoke cell green and reduction >= 2x.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from dataclasses import replace
+from typing import Dict, List
+
+from repro.analysis.explore import (SMOKE_CELLS, ExploreStats,
+                                    _explore_exhaustive, _smoke_build,
+                                    explore_scenario)
+
+
+def bench_cell(name: str, args: Dict, cfg, *, naive: bool = False) -> Dict:
+    t0 = time.perf_counter()
+    if naive:
+        stats = ExploreStats()
+        base = replace(cfg, por=False, dedup=False, minimize=False)
+        _explore_exhaustive(lambda pol: _smoke_build(name, args, pol),
+                            base, stats)
+        ok = True
+    else:
+        res = explore_scenario(name, cfg, args)
+        stats, ok = res.stats, res.ok
+    dt = time.perf_counter() - t0
+    return {
+        "scenario": name, "args": dict(args), "strategy": cfg.strategy,
+        "window_ms": cfg.window_ms, "naive": naive, "ok": ok,
+        "schedules": stats.schedules, "pruned_sleep": stats.pruned_sleep,
+        "states_deduped": stats.states_deduped, "branches": stats.branches,
+        "decisions": stats.decisions, "truncated": stats.truncated,
+        "runs": stats.runs, "wall_s": round(dt, 4),
+        "schedules_per_s": round(stats.schedules / dt, 1) if dt else 0.0,
+        "runs_per_s": round(stats.runs / dt, 1) if dt else 0.0,
+    }
+
+
+def main(argv=None) -> Dict:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI grid only (the repro-explore --smoke cells)")
+    ap.add_argument("--check", action="store_true",
+                    help="fail unless all cells green and reduction >= 2x")
+    ap.add_argument("--out", default="BENCH_explore.json")
+    ns = ap.parse_args(argv)
+
+    cells = list(SMOKE_CELLS)
+    if not ns.smoke:
+        # off-smoke: sweep the commutation window on the first bank cell
+        name, args, cfg = SMOKE_CELLS[0]
+        cells += [(name, {**args, "seed": 1},
+                   replace(cfg, window_ms=w)) for w in (0.2, 0.8)]
+
+    rows: List[Dict] = []
+    for name, args, cfg in cells:
+        row = bench_cell(name, args, cfg)
+        rows.append(row)
+        print(f"{name} {args}: {row['schedules']} schedules "
+              f"({row['pruned_sleep']} sleep-pruned, "
+              f"{row['states_deduped']} deduped) in {row['wall_s']}s "
+              f"-> {row['runs_per_s']} runs/s"
+              f"{' TRUNCATED' if row['truncated'] else ''}"
+              f"{'' if row['ok'] else ' VIOLATION'}")
+
+    # reduction ratio: naive enumeration vs POR+dedup on the first cell
+    name, args, cfg = SMOKE_CELLS[0]
+    nrow = bench_cell(name, args, cfg, naive=True)
+    rows.append(nrow)
+    reduced = next(r for r in rows if not r["naive"])
+    reduction = nrow["runs"] / max(1, reduced["runs"])
+    print(f"reduction: naive {nrow['runs']} runs vs {reduced['runs']} "
+          f"POR+dedup -> {reduction:.1f}x")
+
+    out = {"bench": "explore", "smoke": bool(ns.smoke),
+           "reduction": round(reduction, 2), "rows": rows}
+    with open(ns.out, "w") as f:
+        json.dump(out, f, indent=2)
+    print(f"wrote {ns.out}")
+
+    if ns.check:
+        bad = [r for r in rows if not r["naive"] and
+               (not r["ok"] or (r["strategy"] == "exhaustive"
+                                and r["truncated"]))]
+        assert not bad, f"exploration cells failed: {bad}"
+        assert reduction >= 2.0, \
+            f"POR+dedup reduction {reduction:.2f}x below 2x floor"
+        print("check ok: all cells green, reduction >= 2x")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,8 +1,8 @@
 """Lint rule registry.  Each module exposes a RULE with id/doc/check."""
 from __future__ import annotations
 
-from . import (host_sync, id_dtype, jit_static, ops_ref, pow2_pad,
-               state_mut)
+from . import (event_determinism, host_sync, id_dtype, jit_static, ops_ref,
+               pow2_pad, state_mut)
 
 ALL_RULES = [
     host_sync.RULE,
@@ -11,4 +11,5 @@ ALL_RULES = [
     state_mut.RULE,
     jit_static.RULE,
     pow2_pad.RULE,
+    event_determinism.RULE,
 ]

@@ -164,6 +164,12 @@ class SimConfig:
     # certification write-lock inputs.  Pure post-state reads — a
     # sanitize-on run is byte-identical to sanitize-off, just slower.
     sanitize: bool = False
+    # Schedule-space exploration (repro.analysis.explore): an ExploreConfig
+    # whose ``policy`` attribute, when set, is installed as the event
+    # queue's SchedulePolicy — the explorer re-constructs the cluster per
+    # explored schedule and swaps in its recording policy through this
+    # field.  None (default): the plain (time, seq) heap order.
+    explore: Optional["ExploreConfig"] = None  # noqa: F821 (repro.analysis)
 
 
 @dataclass
@@ -265,7 +271,8 @@ class Cluster:
     def __init__(self, cfg: SimConfig, workload: Workload, ccmap=None) -> None:
         self.cfg = cfg
         self.workload = workload
-        self.events = EventQueue()
+        policy = None if cfg.explore is None else cfg.explore.policy
+        self.events = EventQueue(policy=policy)
         self.gcs = SimGCS(self.events, cfg.n_nodes, cfg.latency)
         self.ccmap = ccmap or ConflictClassMap(
             cfg.n_classes, stride=max(1, cfg.n_items // cfg.n_classes)
@@ -329,6 +336,34 @@ class Cluster:
 
     def throughput(self) -> float:
         return self.metrics.throughput(self.cfg.warmup_ms, self.cfg.duration_ms)
+
+    def wedged(self) -> List[str]:
+        """Stuck protocol work, for the explorer's quiescence check.
+
+        Meaningful once the event queue has drained with ``_stopped`` set:
+        the closed loop schedules nothing new, so any surviving in-flight
+        transaction or waiter can only be waiting on a protocol event that
+        will never come — a lease circulation deadlock no per-event
+        invariant check can see.  Transactions originated by a failed
+        member are excluded (fail-stop: nobody restarts them).
+        """
+        out: List[str] = []
+        for txid in sorted(self._inflight):
+            txn = self._inflight[txid]
+            if self.gcs.alive(txn.origin):
+                out.append(f"txn {txid} in-flight (origin {txn.origin}, "
+                           f"exec {txn.exec_node})")
+        for r in self.replicas:
+            if not self.gcs.alive(r.node):
+                continue
+            for (txn, lors) in r.waiters:
+                ccs = sorted({cc for l in lors for cc in l.ccs})
+                out.append(f"txn {txn.txid} awaiting enablement of "
+                           f"{ccs} at node {r.node}")
+            if r.prefetch_waiters:
+                out.append(f"{len(r.prefetch_waiters)} prefetch group(s) "
+                           f"never headed their queues at node {r.node}")
+        return out
 
     def _schedule_stats_sync(self) -> None:
         def sync():

@@ -145,6 +145,22 @@ class LeaseManagerBase:
         settle per instant."""
         return [self.is_enabled(g) for g in groups]
 
+    def protocol_state(self) -> Tuple:
+        """Canonical protocol-state snapshot for the schedule explorer.
+
+        Covers exactly the replicated state the fingerprint dedup keys on:
+        per-class queue contents in order (req, proc, activeXacts, blocked),
+        the opt-delivered-but-pending request ids, and the dead set.  Both
+        managers emit the same shape, so a sequential and a sharded replica
+        in the same protocol state fingerprint identically.
+        """
+        queues = tuple(
+            (cc, tuple((l.req_id, l.proc, l.activeXacts, bool(l.blocked))
+                       for l in self.cq[cc]))
+            for cc in range(self.n_classes) if self.cq[cc])
+        return (queues, tuple(sorted(self._pending_opt)),
+                tuple(sorted(self._dead)))
+
     # -- protocol events (identical in both variants) -----------------------
     def on_to_deliver(self, req: LeaseRequest) -> List[LOR]:
         """TO-deliver of a lease request: enqueue its LORs (Alg. 1 l.21-23).

@@ -433,9 +433,9 @@ class ShardedLeaseManager:
         numpy twin — the two agree bitwise (tests pin it).
         """
         if fresh_ccs is None:
-            fresh_ccs = np.empty((0,), np.int64)
-        fresh_ccs = np.asarray(fresh_ccs, np.int64)
-        flat_cc = np.fromiter((l._cc for g in groups for l in g), np.int64)
+            fresh_ccs = np.empty((0,), np.int32)
+        fresh_ccs = np.asarray(fresh_ccs, np.int32)
+        flat_cc = np.fromiter((l._cc for g in groups for l in g), np.int32)
         rel = np.unique(np.concatenate([flat_cc, fresh_ccs]))
         Cp = _pow2(max(rel.size, 1))
         head_req = np.full((Cp,), -1, np.int32)
@@ -538,7 +538,7 @@ class ShardedLeaseManager:
             self._by_req[req.req_id] = handles
             out.append(handles)
         if ccs_l:
-            flat = np.asarray(ccs_l, np.int64)
+            flat = np.asarray(ccs_l, np.int32)
             flat_rid = np.asarray(rid_l, np.int32)
             flat_proc = np.asarray(proc_l, np.int32)
             flat_blk = np.asarray(blk_l, bool)
@@ -572,12 +572,12 @@ class ShardedLeaseManager:
             flat.extend(req.ccs)
         if not flat:
             return []
-        return self._opt_block_stream(np.asarray(flat, np.int64))
+        return self._opt_block_stream(np.asarray(flat, np.int32))
 
     def _opt_block_stream(self, ccs_flat: np.ndarray) -> List[BatchedLOR]:
         uniq, first_idx = np.unique(ccs_flat, return_index=True)
         fresh_u = np.zeros((uniq.size,), bool)     # head own & unblocked, pre
-        head_rid = np.full((uniq.size,), -1, np.int64)
+        head_rid = np.full((uniq.size,), -1, np.int32)
         for sh, rows, m in self._split(uniq):
             cols = np.arange(sh.cap)[None, :]
             valid = cols < sh.qlen[rows, None]
@@ -632,7 +632,7 @@ class ShardedLeaseManager:
                     procs.append(proc)
         if not ccs:
             return
-        flat = np.asarray(ccs, np.int64)
+        flat = np.asarray(ccs, np.int32)
         flat_rid = np.asarray(rids, np.int32)
         flat_proc = np.asarray(procs, np.int32)
         for sh, rows, m in self._split(flat):
@@ -667,7 +667,7 @@ class ShardedLeaseManager:
         flat: List[BatchedLOR] = [l for g in groups for l in g]
         if not flat:
             return []
-        ccs = np.fromiter((l.cc for l in flat), np.int64, count=len(flat))
+        ccs = np.fromiter((l.cc for l in flat), np.int32, count=len(flat))
         rids = np.fromiter((l.req_id for l in flat), np.int32,
                            count=len(flat))
         procs = np.fromiter((l.proc for l in flat), np.int32,
@@ -714,6 +714,27 @@ class ShardedLeaseManager:
     def missing_ccs(self, ccs: FrozenSet[int]) -> FrozenSet[int]:
         return frozenset(cc for cc in ccs
                          if not self.has_unblocked(cc, self.proc))
+
+    def protocol_state(self) -> Tuple:
+        """Canonical protocol-state snapshot for the schedule explorer.
+
+        Same shape as ``LeaseManagerBase.protocol_state`` — read straight
+        off the shard arrays so fingerprinting skips the per-cell handle
+        objects the ``cq`` view would allocate.
+        """
+        queues = []
+        for s_id, sh in enumerate(self._shards):
+            for row, slot in sh.slot_of.items():
+                n = int(sh.qlen[slot])
+                if n:
+                    cc = (row << self._sbits) | s_id
+                    queues.append((cc, tuple(
+                        (int(sh.req[slot, i]), int(sh.proc[slot, i]),
+                         int(sh.active[slot, i]), bool(sh.blocked[slot, i]))
+                        for i in range(n))))
+        queues.sort()
+        return (tuple(queues), tuple(sorted(self._pending_opt)),
+                tuple(sorted(self._dead)))
 
     # -- view change ---------------------------------------------------------
     def purge_proc(self, proc: int) -> None:

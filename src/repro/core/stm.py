@@ -163,7 +163,7 @@ class VersionedStore:
         if n == 0:
             return
         items = np.fromiter(
-            (i for ws in write_sets for i in ws), np.int64, count=n)
+            (i for ws in write_sets for i in ws), np.int32, count=n)
         vals = np.fromiter(
             (v for ws in write_sets for v in ws.values()), np.float64, count=n)
         vers = np.repeat(

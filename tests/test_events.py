@@ -1,0 +1,187 @@
+"""Property tests for the deterministic event engine (core.events).
+
+Four contracts the schedule explorer leans on, checked over generated
+schedules: same-instant FIFO, cancel semantics, ``at()`` clamping, and
+``run(max_events=)`` resumption.  Uses hypothesis when installed; in
+minimal environments the same properties run over a seeded random-case
+sweep (deterministic, no extra dependency)."""
+import random
+
+import pytest
+
+from repro.core.events import EventQueue, SchedulePolicy
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYP = True
+except ImportError:          # container without dev extras: seeded sweep
+    HAVE_HYP = False
+
+
+# delays quantized to a coarse grid so same-instant collisions are common
+# (the interesting regime for FIFO and policy-identity properties)
+def _gen_delays(rnd, n_max=24):
+    return [rnd.randrange(0, 8) * 0.5 for _ in range(rnd.randrange(0, n_max))]
+
+
+def forall_delays(test):
+    """Run ``test(delays)`` over many generated schedules."""
+    if HAVE_HYP:
+        strat = st.lists(
+            st.integers(0, 7).map(lambda k: k * 0.5), max_size=24)
+        return settings(deadline=None, max_examples=120)(given(strat)(test))
+
+    def runner():
+        rnd = random.Random(0xA11CE)
+        for _ in range(200):
+            test(_gen_delays(rnd))
+    # plain rename, not functools.wraps: copying __wrapped__ would make
+    # pytest read the one-argument signature and look for a fixture
+    runner.__name__ = test.__name__
+    runner.__doc__ = test.__doc__
+    return runner
+
+
+def _schedule_all(q, delays, log):
+    return [q.schedule(d, (lambda i=i: log.append(i))) for i, d in
+            enumerate(delays)]
+
+
+# ---------------------------------------------------------------------------
+# 1. same-instant FIFO: equal-time events fire in scheduling order
+# ---------------------------------------------------------------------------
+
+@forall_delays
+def test_same_instant_fifo(delays):
+    log = []
+    q = EventQueue()
+    _schedule_all(q, delays, log)
+    q.run(1e9)
+    want = [i for _, i in sorted((d, i) for i, d in enumerate(delays))]
+    assert log == want
+    assert q.empty() and q.n_dispatched == len(delays)
+
+
+@forall_delays
+def test_identity_policy_matches_no_policy(delays):
+    """The base SchedulePolicy is byte-identical to running policy-free."""
+    logs = []
+    for pol in (None, SchedulePolicy()):
+        log = []
+        q = EventQueue(policy=pol)
+        _schedule_all(q, delays, log)
+        q.run(1e9)
+        logs.append((log, q.now, q.n_dispatched))
+    assert logs[0] == logs[1]
+
+
+# ---------------------------------------------------------------------------
+# 2. cancel semantics
+# ---------------------------------------------------------------------------
+
+@forall_delays
+def test_cancel_before_run_suppresses_exactly_those(delays):
+    rnd = random.Random(len(delays) * 1000 + int(sum(delays) * 2))
+    log = []
+    q = EventQueue()
+    evs = _schedule_all(q, delays, log)
+    dropped = {i for i in range(len(delays)) if rnd.random() < 0.4}
+    for i in dropped:
+        q.cancel(evs[i])
+    q.run(1e9)
+    want = [i for _, i in sorted((d, i) for i, d in enumerate(delays))
+            if i not in dropped]
+    assert log == want
+    assert q.empty()
+
+
+def test_cancel_mid_run_and_after_dispatch():
+    log = []
+    q = EventQueue()
+    late = q.schedule(2.0, lambda: log.append("late"))
+    first = q.schedule(1.0, lambda: (log.append("first"), q.cancel(late)))
+    q.run(10.0)
+    assert log == ["first"]
+    q.cancel(first)            # cancelling an already-fired event: no-op
+    assert q.empty() and q.n_dispatched == 1
+
+
+# ---------------------------------------------------------------------------
+# 3. at() clamping + negative-delay rejection
+# ---------------------------------------------------------------------------
+
+@forall_delays
+def test_at_clamps_past_times_to_now(delays):
+    q = EventQueue()
+    q.schedule(5.0, lambda: None)
+    q.run(5.0)
+    assert q.now == 5.0
+    log = []
+    for i, d in enumerate(delays):
+        # request times both before and after `now`; the past ones clamp
+        ev = q.at(d * 2.0, (lambda i=i: log.append(i)))
+        assert ev.time >= q.now
+    q.run(1e9)
+    # clamped events (target <= now) keep their scheduling order at `now`,
+    # future ones sort by requested time — overall (time, seq) order
+    want = [i for _, _, i in sorted((max(d * 2.0, 5.0), i, i)
+                                    for i, d in enumerate(delays))]
+    assert log == want
+
+
+def test_negative_delay_rejected():
+    q = EventQueue()
+    with pytest.raises(ValueError):
+        q.schedule(-0.1, lambda: None)
+
+
+# ---------------------------------------------------------------------------
+# 4. run(max_events=) resumption
+# ---------------------------------------------------------------------------
+
+def _closed_loop(q, log, fanout, depth):
+    """Callbacks that reschedule: a realistic self-extending workload."""
+    def fire(tag, d):
+        log.append(tag)
+        if d < depth:
+            for j in range(fanout):
+                q.schedule(0.5 * (j + 1),
+                           (lambda t=(tag * 10 + j), dd=d + 1: fire(t, dd)))
+    for i in range(3):
+        q.schedule(0.5 * i, (lambda i=i: fire(i, 0)))
+
+
+@pytest.mark.parametrize("chunk", [1, 2, 7])
+def test_run_max_events_resumption_matches_one_shot(chunk):
+    full_log = []
+    q = EventQueue()
+    _closed_loop(q, full_log, fanout=2, depth=3)
+    q.run(1e9)
+
+    log = []
+    q2 = EventQueue()
+    _closed_loop(q2, log, fanout=2, depth=3)
+    for _ in range(10_000):
+        if q2.empty():
+            break
+        q2.run(1e9, max_events=chunk)
+    assert log == full_log
+    assert q2.now == q.now and q2.n_dispatched == q.n_dispatched
+
+
+@forall_delays
+def test_run_until_partitions_compose(delays):
+    """run(t1); run(t2) dispatches exactly what one run(t2) would."""
+    full = []
+    q = EventQueue()
+    _schedule_all(q, delays, full)
+    q.run(4.0)
+
+    split = []
+    q2 = EventQueue()
+    _schedule_all(q2, delays, split)
+    q2.run(1.5)
+    assert q2.now == 1.5
+    q2.run(4.0)
+    assert split == full and q2.now == q.now == 4.0

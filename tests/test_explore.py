@@ -1,0 +1,164 @@
+"""Explorer machinery tests: trace round-trip, ddmin, identity-policy
+byte-identity on a real cluster, POR reduction, and the CI smoke grid
+(green by construction, including the pipelined-handoff cell)."""
+from dataclasses import replace
+
+import numpy as np
+import pytest
+
+from repro.analysis.explore import (SMOKE_CELLS, ExploreConfig, ExploreStats,
+                                    _explore_exhaustive, _smoke_build,
+                                    explore_scenario, main)
+from repro.analysis.trace import Cand, Decision, Trace, ddmin
+from repro.core.events import SchedulePolicy
+
+
+# ---------------------------------------------------------------------------
+# ddmin
+# ---------------------------------------------------------------------------
+
+def test_ddmin_reduces_to_the_failing_core():
+    items = list(range(16))
+    culprits = {3, 11}
+    calls = []
+
+    def test_fn(subset):
+        calls.append(list(subset))
+        return culprits <= set(subset)
+
+    out = ddmin(items, test_fn)
+    assert sorted(out) == sorted(culprits)
+    # 1-minimality: dropping either remaining element loses the failure
+    for x in out:
+        assert not test_fn([y for y in out if y != x])
+
+
+def test_ddmin_single_culprit_and_degenerate_inputs():
+    assert ddmin([7], lambda s: True) == [7]
+    assert ddmin([], lambda s: True) == []
+    out = ddmin(list(range(10)), lambda s: 4 in s)
+    assert out == [4]
+
+
+# ---------------------------------------------------------------------------
+# Trace JSON round-trip
+# ---------------------------------------------------------------------------
+
+def test_trace_json_roundtrip():
+    tr = Trace(
+        model="mutant-stale-piggyback", args={"mutant": True},
+        window_ms=0.6,
+        violation=("blocked-and-drained", "piggyback on blocked LOR"),
+        decisions=[
+            Decision(time=1.05, chosen=9, default=4, cands=[
+                Cand(seq=4, time=1.05, kind="to", node=0, label="to:lease:1",
+                     keys=(0,), eligible=True),
+                Cand(seq=9, time=1.05, kind="opt", node=0,
+                     label="opt:lease:2", keys=(0, 2), eligible=True),
+                Cand(seq=12, time=1.05, kind="to", node=1, label="",
+                     keys=None, eligible=False),
+            ]),
+            Decision(time=2.0, chosen=20, default=20,
+                     cands=[Cand(seq=20, time=2.0)]),
+        ])
+    back = Trace.from_json(tr.to_json())
+    assert back.to_json() == tr.to_json()
+    assert back.violation == tr.violation
+    assert back.chosen == [9, 20]
+    assert back.deviations() == [(0, 9)]
+    assert back.decisions[0].cands[1].keys == (0, 2)
+    assert back.decisions[0].cands[2].eligible is False
+
+
+# ---------------------------------------------------------------------------
+# Identity: the policy seam is byte-invisible when it never reorders
+# ---------------------------------------------------------------------------
+
+def test_identity_policy_byte_identical_to_no_policy():
+    from repro.core.cluster import Cluster, SimConfig
+    from repro.core.workloads import BankWorkload
+
+    def run(explore):
+        cfg = SimConfig(n_nodes=3, threads_per_node=2, n_items=48,
+                        n_classes=6, duration_ms=40.0, warmup_ms=0.0,
+                        drain_ms=30.0, certify_jax_min=1 << 30,
+                        lease_jax_min=1 << 30, seed=3, sanitize=True,
+                        explore=explore)
+        wl = BankWorkload(n_nodes=cfg.n_nodes, n_items=cfg.n_items,
+                          locality=0.6)
+        c = Cluster(cfg, wl)
+        c.run()
+        c.events.run(cfg.duration_ms + cfg.drain_ms + 60_000.0)
+        return c
+
+    a = run(None)
+    b = run(ExploreConfig(policy=SchedulePolicy()))
+    assert a.metrics.commits == b.metrics.commits > 0
+    assert a.events.n_dispatched == b.events.n_dispatched
+    for ra, rb in zip(a.replicas, b.replicas):
+        assert np.array_equal(ra.store.versions, rb.store.versions)
+        assert np.array_equal(ra.store.values, rb.store.values)
+
+
+# ---------------------------------------------------------------------------
+# Smoke grid: every CI cell is green, including handoff="pipelined"
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("i", range(len(SMOKE_CELLS)),
+                         ids=[f"{n}-{a.get('lease_mode', 'pct')}-"
+                              f"{a.get('handoff', '')}".rstrip("-")
+                              for n, a, _ in SMOKE_CELLS])
+def test_smoke_cell_green(i):
+    name, args, cfg = SMOKE_CELLS[i]
+    res = explore_scenario(name, cfg, args)
+    assert res.ok, f"{name} {args}: {res.violation.violation}"
+    if cfg.strategy == "exhaustive":
+        # the cell is sized so POR+dedup exploration COMPLETES in budget
+        assert not res.stats.truncated
+        assert res.stats.schedules > 1      # it genuinely explored
+
+
+def test_pipelined_handoff_cell_present_and_explored():
+    """Promotion gate for handoff="pipelined": its schedule space (not just
+    the default schedule) is model-checked clean — see ROADMAP."""
+    cells = [(n, a) for n, a, _ in SMOKE_CELLS
+             if a.get("handoff") == "pipelined"]
+    assert len(cells) >= 2       # sequential + batched control planes
+
+
+def test_por_reduction_at_least_2x_on_smoke_cell():
+    name, args, cfg = SMOKE_CELLS[0]
+    reduced = explore_scenario(name, cfg, args)
+    assert reduced.ok and not reduced.stats.truncated
+    naive_stats = ExploreStats()
+    naive_cfg = replace(cfg, por=False, dedup=False, minimize=False)
+    _explore_exhaustive(lambda pol: _smoke_build(name, args, pol),
+                        naive_cfg, naive_stats)
+    ratio = naive_stats.runs / max(1, reduced.stats.runs)
+    assert ratio >= 2.0, (f"POR+dedup reduction {ratio:.2f}x "
+                          f"({naive_stats.runs} naive vs "
+                          f"{reduced.stats.runs} reduced)")
+
+
+# ---------------------------------------------------------------------------
+# CLI surface
+# ---------------------------------------------------------------------------
+
+def test_cli_list_and_scenario_run(capsys):
+    assert main(["--list"]) == 0
+    out = capsys.readouterr().out
+    assert "smoke-bank" in out and "mutant-stale-piggyback" in out
+
+    assert main(["--scenario", "mutant-double-grant",
+                 "--max-schedules", "50"]) == 1
+    out = capsys.readouterr().out
+    assert "VIOLATION [single-owner]" in out
+
+
+def test_cli_scenario_writes_replayable_trace(tmp_path):
+    rc = main(["--scenario", "mutant-no-born-blocked", "--window-ms", "0.6",
+               "--max-schedules", "400", "--out", str(tmp_path)])
+    assert rc == 1
+    path = tmp_path / "counterexample-mutant-no-born-blocked.json"
+    assert path.exists()
+    assert main(["replay", str(path)]) == 0

@@ -1,0 +1,80 @@
+"""The explorer re-finds every seeded protocol mutant with a minimized,
+deterministically replayable counterexample.
+
+Ten mutants mirror tests/test_sanitizer_mutants.py (single-schedule
+catchable); two — no-born-blocked and stale-piggyback — are *schedule-
+dependent*: the default FIFO schedule masks them, so the plain sanitizer
+run provably passes and only exploring legal delivery reorderings exposes
+the bug.  That separation is the point of the explorer and is pinned here.
+"""
+import pytest
+
+from repro.analysis.explore import (ExploreConfig, explore_scenario, main,
+                                    replay_trace)
+from repro.analysis.scenarios import MUTANT_INVARIANTS, get_scenario
+from repro.analysis.trace import load_trace, save_trace
+
+CFG = ExploreConfig(strategy="exhaustive", window_ms=0.6, max_schedules=400)
+
+SCHEDULE_ONLY = ("mutant-no-born-blocked", "mutant-stale-piggyback")
+
+
+@pytest.mark.parametrize("name", sorted(MUTANT_INVARIANTS))
+def test_explorer_finds_mutant_with_expected_invariant(name):
+    res = explore_scenario(name, CFG)
+    assert not res.ok, f"{name}: explorer found no violation"
+    inv, _detail = res.violation.violation
+    assert inv == MUTANT_INVARIANTS[name]
+    # minimization ran and preserved the invariant
+    assert res.minimized is not None
+    assert res.minimized.violation is not None
+    assert res.minimized.violation[0] == MUTANT_INVARIANTS[name]
+
+
+@pytest.mark.parametrize("name", sorted(MUTANT_INVARIANTS))
+def test_minimized_counterexample_replays_deterministically(name):
+    res = explore_scenario(name, CFG)
+    tr = res.minimized
+    build = get_scenario(name)
+    vio = replay_trace(lambda pol: build(dict(tr.args), pol), tr)
+    assert vio is not None and vio[0] == MUTANT_INVARIANTS[name]
+
+
+@pytest.mark.parametrize("name", SCHEDULE_ONLY)
+def test_schedule_only_mutants_pass_the_default_schedule(name):
+    """The acceptance property: a single-schedule sanitizer run CANNOT
+    catch these — run 1 is exactly the default FIFO schedule and must be
+    clean; only deeper exploration finds the interleaving."""
+    res = explore_scenario(
+        name, ExploreConfig(strategy="exhaustive", window_ms=0.6,
+                            max_schedules=1, minimize=False))
+    assert res.ok, (f"{name} fired on the default schedule — it is not "
+                    f"schedule-dependent: {res.violation.violation}")
+
+
+@pytest.mark.parametrize("name", SCHEDULE_ONLY)
+def test_schedule_only_mutants_minimize_to_one_deviation(name):
+    """ddmin reduces the counterexample to the default schedule plus a
+    single reordering — the one delivery swap that exposes the bug."""
+    res = explore_scenario(name, CFG)
+    assert len(res.minimized.deviations()) == 1
+
+
+@pytest.mark.parametrize("name", SCHEDULE_ONLY)
+def test_clean_controls_explore_violation_free(name):
+    """With the mutation disabled, the same scenario's full schedule space
+    is clean — the counterexample indicts the mutant, not the harness."""
+    res = explore_scenario(name, CFG, {"mutant": False})
+    assert res.ok
+    assert not res.stats.truncated          # the whole space was covered
+    assert res.stats.schedules >= 2         # and it genuinely branched
+
+
+def test_cli_replay_reproduces_saved_counterexample(tmp_path):
+    res = explore_scenario("mutant-no-born-blocked", CFG)
+    path = tmp_path / "counterexample.json"
+    save_trace(path, res.minimized)
+    # the artifact round-trips and the CLI confirms the same invariant
+    tr = load_trace(path)
+    assert tr.violation[0] == "quiescence"
+    assert main(["replay", str(path)]) == 0

@@ -7,8 +7,9 @@ from pathlib import Path
 import pytest
 
 from repro.analysis import lint as L
-from repro.analysis.rules import (ALL_RULES, host_sync, id_dtype, jit_static,
-                                  ops_ref, pow2_pad, state_mut)
+from repro.analysis.rules import (ALL_RULES, event_determinism, host_sync,
+                                  id_dtype, jit_static, ops_ref, pow2_pad,
+                                  state_mut)
 
 REPO = Path(__file__).resolve().parents[1]
 
@@ -189,6 +190,62 @@ def test_pow2_pad_flags_raw_len_alloc_feeding_dispatch():
 
 
 # ---------------------------------------------------------------------------
+# event-determinism
+# ---------------------------------------------------------------------------
+
+def test_event_determinism_flags_wall_clock_reads_in_core_only():
+    src = """
+        import time
+
+        def on_deliver(self):
+            t = time.time()
+            self.events.schedule(t, lambda: None)
+    """
+    _, vs = _rules(src, event_determinism.RULE)
+    assert len(vs) == 1 and "wall-clock" in vs[0].msg
+    # benchmarks / analysis code may time itself
+    _, vs = _rules(src, event_determinism.RULE,
+                   rel="src/repro/analysis/bench.py")
+    assert vs == []
+
+
+def test_event_determinism_flags_set_iteration_feeding_scheduling():
+    _, vs = _rules("""
+        def recheck(self, nodes):
+            pending = set(nodes)
+            for n in pending:                  # hash order drives dispatch
+                self.events.schedule(0.0, lambda: None)
+            for n in sorted(pending):          # deterministic: fine
+                self.events.schedule(0.0, lambda: None)
+            for n in pending:                  # no scheduling inside: fine
+                self.count += 1
+    """, event_determinism.RULE)
+    assert len(vs) == 1 and "unordered set" in vs[0].msg
+
+
+def test_event_determinism_flags_id_ordering_not_membership():
+    _, vs = _rules("""
+        def order(self, lors, seen):
+            worst = sorted(lors, key=id)       # address order: flagged
+            if id(lors[0]) < id(lors[1]):      # address compare: flagged
+                pass
+            return [l for l in lors if id(l) in seen]   # membership: fine
+    """, event_determinism.RULE)
+    assert len(vs) == 2
+    msgs = "\n".join(v.msg for v in vs)
+    assert "id()" in msgs and "allocation address" in msgs
+
+
+def test_event_determinism_quiet_on_core_modules():
+    for rel in ("src/repro/core/events.py", "src/repro/core/lease.py",
+                "src/repro/core/gcs.py", "src/repro/core/cluster.py"):
+        src = (REPO / rel).read_text()
+        ctx = L.FileCtx(REPO / rel, rel, src, L.Project())
+        vs = L.apply_allows(ctx, event_determinism.RULE.check(ctx))
+        assert vs == [], "\n".join(v.render() for v in vs)
+
+
+# ---------------------------------------------------------------------------
 # ops<->ref parity
 # ---------------------------------------------------------------------------
 
@@ -231,22 +288,18 @@ def test_ops_ref_requires_twin_and_named_test():
 # Repo-wide gate
 # ---------------------------------------------------------------------------
 
-def test_repo_lints_clean_against_committed_baseline():
+def test_repo_lints_fully_clean_no_baseline():
+    """The legacy id-dtype debt is burned down: the repo must lint clean
+    with NO baseline at all — new violations are fixed or inline-allowed,
+    never grandfathered."""
     violations = L.lint_paths([L.DEFAULT_TARGET])
-    baseline = L.load_baseline(L.DEFAULT_BASELINE)
-    fresh = [v for v in violations if v.key not in baseline]
-    assert fresh == [], "\n".join(v.render() for v in fresh)
-    # no stale entries either: the baseline only carries live legacy debt
-    live = {v.key for v in violations}
-    assert baseline <= live
+    assert violations == [], "\n".join(v.render() for v in violations)
 
 
-def test_hot_paths_have_empty_baseline():
-    """kernels/ and plan/score.py violations must be fixed or inline-allowed
-    — the baseline is for legacy burn-down elsewhere, never the hot path."""
-    for key in L.load_baseline(L.DEFAULT_BASELINE):
-        path = key.split("::", 1)[0]
-        assert "/kernels/" not in path and not path.endswith("plan/score.py")
+def test_committed_baseline_is_empty():
+    """The baseline file stays empty forever; re-adding entries reopens the
+    burn-down this gate exists to close."""
+    assert L.load_baseline(L.DEFAULT_BASELINE) == set()
 
 
 def test_baseline_roundtrip(tmp_path):
