@@ -1,0 +1,128 @@
+"""Pipelined vs drain handoff sweep — the default-promotion acceptance bench.
+
+PR 8's explorer model-checked ``handoff="pipelined"`` (Zeus-style overlap
+of the lease-request round with transaction execution) violation-free
+across all legal delivery interleavings; this bench is the perf leg that
+justified flipping the :class:`repro.core.SimConfig` default.  It runs the
+bank cells over the locality × contention grid for the drain-sensitive
+algorithm variants and compares simulated throughput under both handoffs.
+
+Simulated metrics are deterministic per (algo, locality, threads, seed)
+cell, so the acceptance bands are tight:
+
+* every cell: ``pipelined >= MIN_CELL_RATIO × drain`` (a noise floor just
+  under parity — the overlap can never *cost* throughput, but ties at
+  uncontended cells land within scheduler-ordering jitter);
+* grid mean: ``pipelined >= drain`` — the wins at contended high-locality
+  cells (where the owner's drain is longest) must survive averaging.
+
+Writes a ``BENCH_handoff.json`` artifact (``results/BENCH_handoff.json``
+tracks a full run in-repo; ``benchmarks/run.py --check`` re-validates the
+committed numbers).  ``--smoke`` shrinks the grid for CI.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+from typing import Dict, List
+
+from repro.core import BankWorkload, SimConfig, make_cluster
+
+DEFAULT_ALGOS = ["FGL", "LILAC-TM-OPT"]
+MIN_CELL_RATIO = 0.99   # noise floor: ties may jitter a hair under parity
+HANDOFFS = ("drain", "pipelined")
+
+
+def run_cell(algo: str, locality: float, threads: int, handoff: str,
+             duration: float, seed: int = 0) -> Dict[str, float]:
+    cfg = SimConfig(duration_ms=duration, warmup_ms=duration * 0.15,
+                    threads_per_node=threads, seed=seed, handoff=handoff)
+    wl = BankWorkload(n_nodes=cfg.n_nodes, n_items=cfg.n_items,
+                      locality=locality)
+    c = make_cluster(algo, wl, cfg)
+    m = c.run()
+    return {
+        "throughput": c.throughput(),
+        "reuse": m.lease_reuse_rate(),
+        "forwards": m.forwards,
+        "aborts": m.aborts,
+    }
+
+
+def sweep(algos: List[str], localities: List[float], threads: List[int],
+          duration: float, seed: int) -> List[Dict]:
+    rows = []
+    print("algo,locality,threads,handoff,throughput_txn_s,reuse,forwards,"
+          "aborts,ratio_vs_drain")
+    for algo in algos:
+        for p in localities:
+            for th in threads:
+                cell = {}
+                for h in HANDOFFS:
+                    cell[h] = run_cell(algo, p, th, h, duration, seed)
+                base = max(cell["drain"]["throughput"], 1e-9)
+                for h in HANDOFFS:
+                    r = cell[h]
+                    ratio = r["throughput"] / base
+                    rows.append({"algo": algo, "locality": p, "threads": th,
+                                 "handoff": h, "ratio_vs_drain": ratio, **r})
+                    print(f"{algo},{p},{th},{h},{r['throughput']:.1f},"
+                          f"{r['reuse']:.4f},{r['forwards']},{r['aborts']},"
+                          f"{ratio:.4f}", flush=True)
+    return rows
+
+
+def check(rows: List[Dict]) -> None:
+    pipe = [r for r in rows if r["handoff"] == "pipelined"]
+    assert pipe, "no pipelined rows"
+    worst = min(pipe, key=lambda r: r["ratio_vs_drain"])
+    assert worst["ratio_vs_drain"] >= MIN_CELL_RATIO, (
+        f"pipelined below drain at {worst['algo']} P={worst['locality']} "
+        f"th={worst['threads']}: ratio {worst['ratio_vs_drain']:.4f} < "
+        f"{MIN_CELL_RATIO}")
+    mean = sum(r["ratio_vs_drain"] for r in pipe) / len(pipe)
+    assert mean >= 1.0, f"grid mean ratio {mean:.4f} < 1.0"
+    print(f"check ok: pipelined >= {MIN_CELL_RATIO:.2f}x drain on every "
+          f"cell (worst {worst['ratio_vs_drain']:.4f}), grid mean "
+          f"{mean:.4f}x")
+
+
+def main(argv=None) -> List[Dict]:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--algos", nargs="*", default=DEFAULT_ALGOS)
+    ap.add_argument("--localities", nargs="*", type=float,
+                    default=[0.0, 0.5, 0.9])
+    ap.add_argument("--threads", nargs="*", type=int, default=[2, 4])
+    ap.add_argument("--duration", type=float, default=800.0)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny grid for CI: FGL only, 2 cells")
+    ap.add_argument("--check", action="store_true",
+                    help="enforce the pipelined >= drain bands")
+    ap.add_argument("--out", default="BENCH_handoff.json")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        args.algos = ["FGL"]
+        args.localities = [0.0, 0.9]
+        args.threads = [2]
+        args.duration = 400.0
+
+    rows = sweep(args.algos, args.localities, args.threads, args.duration,
+                 args.seed)
+    art = {
+        "bench": "handoff", "algos": args.algos,
+        "localities": args.localities, "threads": args.threads,
+        "duration_ms": args.duration, "seed": args.seed,
+        "smoke": args.smoke, "min_cell_ratio": MIN_CELL_RATIO,
+        "rows": rows,
+    }
+    with open(args.out, "w") as f:
+        json.dump(art, f, indent=2)
+    print(f"wrote {args.out}")
+    if args.check:
+        check(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

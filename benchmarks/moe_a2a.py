@@ -1,0 +1,188 @@
+"""tp-aware MoE token-a2a vs replicated dispatch — the raw-speed bench.
+
+Times one MoE layer under both dispatch plans on an 8-device host mesh
+(2 data × 4 model), for the two chunk layouts the a2a path now covers:
+
+* **mixtral-style** (``n_experts > model_size``): whole experts per model
+  rank (ep=4, tp=1) — the layout the a2a path always handled;
+* **deepseek-style** (``model_size > n_experts``): each expert's FFN split
+  over tp ranks (ep=2, tp=2) — newly reachable via chunk dispatch + the
+  partial-activation psum combine.
+
+Per cell it also records the :func:`repro.dist.locality.price_moe_dispatch`
+verdict (with the new ``tp_degree`` psum term): the autotuner's feasibility
+frontier, re-run over the (tokens_per_device, ep, tp) grid.  The committed
+``results/BENCH_moe_a2a.json`` is re-validated by ``benchmarks/run.py
+--check``: every autotuned cell must hold a noise floor against the
+replicated path, the autotuned geomean speedup must be ≥ 1, and at least
+one deepseek-style (tp > 1) cell must strictly beat replication — the
+newly-reachable layout has to actually pay.  (On the host-CPU mesh the
+a2a's wire advantage is a memcpy, so large-token cells converge to
+compute-bound parity; the wins concentrate where dispatch pricing says
+they should — smaller token counts, where replication's redundant
+routing+FFN work dominates.)
+
+The process forces 8 host devices BEFORE importing jax (same pattern as
+``launch/dryrun.py``); run it standalone, not from a jax-importing parent.
+"""
+from __future__ import annotations
+
+import os
+
+os.environ.setdefault("XLA_FLAGS",
+                      "--xla_force_host_platform_device_count=8")
+
+import argparse          # noqa: E402
+import dataclasses       # noqa: E402
+import json              # noqa: E402
+import time              # noqa: E402
+from typing import Dict, List  # noqa: E402
+
+import jax               # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np       # noqa: E402
+
+
+def _mesh():
+    from jax.sharding import Mesh
+
+    devs = np.array(jax.devices())
+    assert devs.size >= 8, (
+        "moe_a2a bench needs 8 host devices; do not import jax before this "
+        "module sets XLA_FLAGS")
+    return Mesh(devs[:8].reshape(2, 4), ("data", "model"))
+
+
+def _cell_cfg(style: str):
+    """Synthetic layer dims big enough for timing to mean something on CPU."""
+    from repro.models.common import ModelConfig, MoEConfig
+
+    if style == "mixtral":
+        moe = MoEConfig(n_experts=8, top_k=2, d_expert=512)
+    elif style == "deepseek":
+        moe = MoEConfig(n_experts=2, top_k=2, d_expert=1024)
+    else:
+        raise ValueError(style)
+    return ModelConfig(
+        name=f"a2a-bench-{style}", family="moe", n_layers=1, d_model=256,
+        n_heads=4, n_kv_heads=2, head_dim=64, d_ff=512, vocab_size=256,
+        dtype="float32", moe=moe)
+
+
+def run_cell(style: str, tokens: int, *, reps: int = 5) -> Dict[str, float]:
+    from repro.models import moe
+    from repro.models.common import chunk_plan
+
+    cfg = _cell_cfg(style)
+    m = cfg.moe
+    mesh = _mesh()
+    ep, tp, n_e, _ = chunk_plan(m.n_experts, 4)
+    rng = np.random.default_rng(0)
+    d, f = cfg.d_model, m.d_expert
+    router = jnp.asarray(rng.standard_normal((d, m.n_experts)) * 0.1,
+                         jnp.float32)
+    wg = jnp.asarray(rng.standard_normal((m.n_experts, d, f)) * 0.05,
+                     jnp.float32)
+    wu = jnp.asarray(rng.standard_normal((m.n_experts, d, f)) * 0.05,
+                     jnp.float32)
+    wd = jnp.asarray(rng.standard_normal((m.n_experts, f, d)) * 0.05,
+                     jnp.float32)
+    cg, cu, cdn = moe.to_chunked(wg, wu, wd, model_size=4)
+    p = {"router": router,
+         "experts": {"w_gate": cg, "w_up": cu, "w_down": cdn}}
+    x = jnp.asarray(rng.standard_normal((8, tokens // 8, d)), jnp.float32)
+
+    def timed(dispatch: str) -> float:
+        with mesh:
+            fn = jax.jit(lambda xx: moe.moe_apply(
+                p, xx, cfg, mesh, dispatch=dispatch, batch_axes=("data",)))
+            fn(x).block_until_ready()          # compile
+            ts = []
+            for _ in range(reps):
+                t0 = time.perf_counter()
+                fn(x).block_until_ready()
+                ts.append(time.perf_counter() - t0)
+        return float(np.median(ts))
+
+    t_rep = timed("replicate")
+    t_a2a = timed("a2a")
+    shards, ep_, tp_, t_pad = moe._a2a_plan(cfg, tokens, mesh, ("data",),
+                                            "model")
+    verdict = moe.dispatch_verdict(cfg, t_pad // shards, ep_, tp_)
+    return {
+        "style": style, "tokens": tokens, "ep": ep, "tp": tp,
+        "d_model": d, "d_expert": f, "top_k": m.top_k,
+        "n_experts": m.n_experts,
+        "replicate_s": t_rep, "a2a_s": t_a2a,
+        "replicate_tokens_per_s": tokens / t_rep,
+        "a2a_tokens_per_s": tokens / t_a2a,
+        "a2a_speedup": t_rep / t_a2a,
+        "verdict_a2a": bool(verdict),
+    }
+
+
+MIN_CELL_SPEEDUP = 0.95   # noise floor at parity cells (CPU timing jitter)
+
+
+def check(rows: List[Dict]) -> None:
+    styles = {r["style"] for r in rows}
+    assert "deepseek" in styles, "no deepseek-style (tp>1) cell in the grid"
+    tuned = [r for r in rows if r["verdict_a2a"]]
+    assert tuned, "autotuner never picked a2a — pricing regressed"
+    for r in tuned:
+        assert r["a2a_speedup"] >= MIN_CELL_SPEEDUP, (
+            f"{r['style']}@{r['tokens']}: a2a "
+            f"{r['a2a_tokens_per_s']:.0f} tok/s vs replicate "
+            f"{r['replicate_tokens_per_s']:.0f} "
+            f"({r['a2a_speedup']:.2f}x < {MIN_CELL_SPEEDUP}) at an "
+            f"autotuned cell")
+    geo = float(np.exp(np.mean([np.log(r["a2a_speedup"]) for r in tuned])))
+    assert geo >= 1.0, f"autotuned geomean speedup {geo:.3f}x < 1.0"
+    ds = [r for r in tuned if r["tp"] > 1]
+    assert ds, "no autotuned deepseek-style (tp>1) cell"
+    best = max(ds, key=lambda r: r["a2a_speedup"])
+    assert best["a2a_speedup"] > 1.0, (
+        f"tp>1 a2a never beat replication (best {best['a2a_speedup']:.2f}x "
+        f"at {best['tokens']} tokens)")
+    worst = min(tuned, key=lambda r: r["a2a_speedup"])
+    print(f"check ok: {len(tuned)} autotuned cells, geomean {geo:.2f}x, "
+          f"worst {worst['a2a_speedup']:.2f}x "
+          f"({worst['style']}@{worst['tokens']}), best tp>1 "
+          f"{best['a2a_speedup']:.2f}x @{best['tokens']}")
+
+
+def main(argv=None) -> List[Dict]:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tokens", nargs="*", type=int, default=[1024, 4096])
+    ap.add_argument("--reps", type=int, default=11)
+    ap.add_argument("--smoke", action="store_true",
+                    help="one token size, fewer reps")
+    ap.add_argument("--check", action="store_true")
+    ap.add_argument("--out", default="BENCH_moe_a2a.json")
+    args = ap.parse_args(argv)
+    if args.smoke:
+        args.tokens, args.reps = [1024], 3
+
+    rows = []
+    print("style,tokens,ep,tp,replicate_tok_s,a2a_tok_s,speedup,verdict_a2a")
+    for style in ("mixtral", "deepseek"):
+        for t in args.tokens:
+            r = run_cell(style, t, reps=args.reps)
+            rows.append(r)
+            print(f"{style},{t},{r['ep']},{r['tp']},"
+                  f"{r['replicate_tokens_per_s']:.0f},"
+                  f"{r['a2a_tokens_per_s']:.0f},{r['a2a_speedup']:.2f},"
+                  f"{int(r['verdict_a2a'])}", flush=True)
+
+    art = {"bench": "moe_a2a", "mesh": "2x4 host", "reps": args.reps,
+           "smoke": args.smoke, "rows": rows}
+    with open(args.out, "w") as f:
+        json.dump(art, f, indent=2)
+    print(f"wrote {args.out}")
+    if args.check:
+        check(rows)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -21,6 +21,15 @@ Acceptance (``--check``, 3-seed averages):
   gates (``min_events``, ``min_frac`` dominance) keep the planner idle
   when there is nothing to exploit.
 
+The artifact also carries an **overlap** cell: how much of a plan epoch's
+scoring wall-time the async split (``PlacementPlanner.begin``/``finish``)
+takes *off* the decode step loop.  It times the synchronous
+``score_moves`` (dispatch + materialize) against the async protocol —
+kick, overlapped host work standing in for decode steps, harvest — at the
+serving planner's pow2-padded [class, target] shape, sharded over the
+plan mesh.  ``--check`` enforces ``off_path_frac ≥ 0.8``: at least 80% of
+scoring wall-time overlaps decode, the PR's async-planner acceptance band.
+
 Writes a ``BENCH_planner.json`` trajectory artifact (CI uploads it;
 ``results/BENCH_planner.json`` tracks a full run in-repo).  ``--smoke``
 shrinks the grid for CI so the sweep can't silently rot.
@@ -32,7 +41,10 @@ import dataclasses
 import json
 import os
 import sys
+import time
 from typing import Dict, List
+
+import numpy as np
 
 sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
 
@@ -66,7 +78,68 @@ def sweep(arch: str, localities: List[float], *, n_pods: int, n_sessions: int,
     return rows
 
 
-def check(rows: List[Dict], localities: List[float], *, smoke: bool) -> None:
+MIN_OFF_PATH_FRAC = 0.8   # async split must hide ≥80% of scoring wall-time
+
+
+def overlap_cell(*, n_classes: int = 1 << 17, n_nodes: int = 16,
+                 reps: int = 5) -> Dict[str, float]:
+    """Time sync vs async (kick → overlapped decode work → harvest) scoring.
+
+    The decode stand-in is plain numpy host work, like the engine's step
+    loop between epoch boundaries; jax's async dispatch evaluates the
+    sharded scoring underneath it, so the step loop only pays the kick
+    (input snapshot + dispatch) and the harvest (materialize + bound).
+    """
+    from repro.dist.sharding import make_plan_mesh
+    from repro.plan.score import score_moves, score_moves_async
+
+    mesh = make_plan_mesh()
+    rng = np.random.default_rng(0)
+    # float32 like AffinityTracker.rates — the scorer's input boundary
+    rates = (rng.random((n_classes, n_nodes)) * 0.05).astype(np.float32)
+    owner = rng.integers(0, n_nodes, n_classes).astype(np.int32)
+    # float32 like price_move_costs — the other scorer input boundary
+    fwd_cost = np.full(n_classes, 2e-4, np.float32)
+    move_cost = np.full(n_classes, 1e-3, np.float32)
+    cpu = (rng.random(n_nodes) * 0.5).astype(np.float64)
+    kw = dict(horizon_ms=500.0, margin=3.0, min_frac=0.7, min_rate=0.016,
+              load_gain=0.02, mesh=mesh)
+    decode = [np.ones(1 << 20) for _ in range(2)]
+
+    def decode_steps(n: int = 12) -> float:
+        t0 = time.perf_counter()
+        for _ in range(n):
+            decode[0] = decode[0] + decode[1]
+        return time.perf_counter() - t0
+
+    score_moves(rates, owner, fwd_cost, move_cost, cpu, **kw)   # warm jit
+    t_sync = t_kick = t_harvest = t_decode = 0.0
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        score_moves(rates, owner, fwd_cost, move_cost, cpu, **kw)
+        t_sync += time.perf_counter() - t0
+
+        t0 = time.perf_counter()
+        fut = score_moves_async(rates, owner, fwd_cost, move_cost, cpu, **kw)
+        t_kick += time.perf_counter() - t0
+        t_decode += decode_steps()            # scoring runs under this
+        t0 = time.perf_counter()
+        np.asarray(fut)
+        t_harvest += time.perf_counter() - t0
+    t_sync, t_kick, t_harvest, t_decode = (
+        t / reps for t in (t_sync, t_kick, t_harvest, t_decode))
+    on_path = t_kick + t_harvest
+    return {
+        "n_classes": n_classes, "n_nodes": n_nodes, "reps": reps,
+        "plan_mesh_devices": 1 if mesh is None else int(mesh.size),
+        "sync_s": t_sync, "kick_s": t_kick, "harvest_s": t_harvest,
+        "decode_work_s": t_decode,
+        "off_path_frac": 1.0 - on_path / max(t_sync, 1e-12),
+    }
+
+
+def check(rows: List[Dict], localities: List[float], *, smoke: bool,
+          overlap: Dict[str, float] | None = None) -> None:
     by = {(r["planner"], r["locality"]): r for r in rows}
     hi = [p for p in localities if p >= 0.7]
     if smoke:
@@ -75,8 +148,19 @@ def check(rows: List[Dict], localities: List[float], *, smoke: bool) -> None:
         for p in localities:
             on = by[(True, p)]
             assert on["tokens_per_s"] > 0
+        if overlap is not None:
+            assert overlap["off_path_frac"] > 0.0, (
+                f"async scoring saved nothing off the step loop "
+                f"({overlap['off_path_frac']:.2f})")
         print("smoke check ok: planner path exercised on the full grid")
         return
+    if overlap is not None:
+        assert overlap["off_path_frac"] >= MIN_OFF_PATH_FRAC, (
+            f"async split leaves {1 - overlap['off_path_frac']:.0%} of "
+            f"scoring wall-time on the step loop (need ≤ "
+            f"{1 - MIN_OFF_PATH_FRAC:.0%}): kick {overlap['kick_s']*1e3:.2f}"
+            f"ms + harvest {overlap['harvest_s']*1e3:.2f}ms vs sync "
+            f"{overlap['sync_s']*1e3:.2f}ms")
     for p in hi:
         off, on = by[(False, p)], by[(True, p)]
         assert on["wire_GB"] < off["wire_GB"], (
@@ -116,6 +200,12 @@ def main(argv=None) -> List[Dict]:
     rows = sweep(args.arch, args.localities, n_pods=args.pods,
                  n_sessions=args.sessions, steps=args.steps,
                  seeds=args.seeds, plan_epoch_ms=args.plan_epoch_ms)
+    overlap = overlap_cell(n_classes=1 << 14 if args.smoke else 1 << 17,
+                           reps=3 if args.smoke else 5)
+    print(f"overlap: sync {overlap['sync_s']*1e3:.2f}ms, kick "
+          f"{overlap['kick_s']*1e3:.2f}ms, harvest "
+          f"{overlap['harvest_s']*1e3:.2f}ms, off_path "
+          f"{overlap['off_path_frac']:.1%}")
     art = {
         "bench": "planner", "arch": args.arch, "pods": args.pods,
         "sessions": args.sessions, "steps": args.steps, "seeds": args.seeds,
@@ -125,13 +215,14 @@ def main(argv=None) -> List[Dict]:
                 else str(v))
             for k, v in dataclasses.asdict(SERVE_PLAN_DEFAULTS).items()
         },
+        "overlap": overlap,
         "rows": rows,
     }
     with open(args.out, "w") as f:
         json.dump(art, f, indent=2)
     print(f"wrote {args.out}")
     if args.check:
-        check(rows, args.localities, smoke=args.smoke)
+        check(rows, args.localities, smoke=args.smoke, overlap=overlap)
     return rows
 
 

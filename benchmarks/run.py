@@ -33,6 +33,9 @@ import time
 CERTIFY_MIN_SPEEDUP = 5.0
 LEASE_OPS_MIN_SPEEDUP = 10.0
 PLANNER_WIRE_REDUCTION = (0.70, 0.95)   # at locality >= 0.7
+PLANNER_MIN_OFF_PATH = 0.8       # async split hides >=80% of scoring time
+A2A_MIN_CELL_SPEEDUP = 0.95      # noise floor at parity cells
+HANDOFF_MIN_CELL_RATIO = 0.99    # pipelined vs drain, per cell
 
 
 def check_artifacts(results_dir: str = "results") -> None:
@@ -70,6 +73,39 @@ def check_artifacts(results_dir: str = "results") -> None:
             f"planner: wire reduction {red:.2%} at P={p} outside "
             f"[{lo_b:.0%}, {hi_b:.0%}]")
         print(f"planner ok: wire -{red:.1%} at P={p}")
+    ov = plan["overlap"]
+    assert ov["off_path_frac"] >= PLANNER_MIN_OFF_PATH, (
+        f"planner: async split hides only {ov['off_path_frac']:.0%} of "
+        f"scoring wall-time (< {PLANNER_MIN_OFF_PATH:.0%})")
+    print(f"planner ok: async scoring {ov['off_path_frac']:.0%} off the "
+          f"step loop at {ov['n_classes']} classes")
+
+    a2a = load("BENCH_moe_a2a.json")
+    tuned = [r for r in a2a["rows"] if r["verdict_a2a"]]
+    assert tuned, "moe_a2a artifact has no autotuned-to-a2a cells"
+    assert any(r["tp"] > 1 for r in tuned), \
+        "moe_a2a artifact has no deepseek-style (tp>1) autotuned cell"
+    worst = min(r["a2a_speedup"] for r in tuned)
+    assert worst >= A2A_MIN_CELL_SPEEDUP, (
+        f"moe_a2a: a2a {worst:.2f}x below the {A2A_MIN_CELL_SPEEDUP}x floor "
+        f"at an autotuned cell")
+    best_tp = max(r["a2a_speedup"] for r in tuned if r["tp"] > 1)
+    assert best_tp > 1.0, (
+        f"moe_a2a: tp>1 a2a never beats replication (best {best_tp:.2f}x)")
+    print(f"moe_a2a ok: {len(tuned)} autotuned cells, worst {worst:.2f}x, "
+          f"best tp>1 {best_tp:.2f}x")
+
+    hand = load("BENCH_handoff.json")
+    pipe = [r for r in hand["rows"] if r["handoff"] == "pipelined"]
+    assert pipe, "handoff artifact has no pipelined rows"
+    worst_r = min(r["ratio_vs_drain"] for r in pipe)
+    mean_r = sum(r["ratio_vs_drain"] for r in pipe) / len(pipe)
+    assert worst_r >= HANDOFF_MIN_CELL_RATIO, (
+        f"handoff: pipelined {worst_r:.4f}x drain below "
+        f"{HANDOFF_MIN_CELL_RATIO} — the default flip is unjustified")
+    assert mean_r >= 1.0, f"handoff: grid mean {mean_r:.4f}x < 1.0"
+    print(f"handoff ok: pipelined worst {worst_r:.4f}x / mean {mean_r:.4f}x "
+          f"vs drain over {len(pipe)} cells")
 
 
 def main() -> None:

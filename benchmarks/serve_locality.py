@@ -56,9 +56,11 @@ def run_point(arch: str, policy: str, locality: float, *, n_pods: int = 8,
                             kv_bytes_per_token=kv_per_tok)
     planner = None
     if plan_epoch_ms > 0:
+        from repro.dist.sharding import make_plan_mesh
         from repro.plan import PlacementPlanner
         planner = PlacementPlanner.for_serving(
-            n_pods, n_sessions, epoch_ms=plan_epoch_ms)
+            n_pods, n_sessions, epoch_ms=plan_epoch_ms,
+            mesh=make_plan_mesh())
     eng = MultiPodEngine(n_pods, SimBackend(cfg), router, planner=planner)
     rng = np.random.default_rng(seed)
     for _ in range(steps):

@@ -135,15 +135,18 @@ class SimConfig:
     lease_mode: str = "batched"
     lease_shards: int = 8
     lease_jax_min: int = 64
-    # Ownership handoff.  "drain" is the paper's ordering: a transaction
-    # executes, then requests its leases, then waits for the current
-    # owner's LORs to drain.  "pipelined" is the Zeus-style overlap: the
-    # footprint is known at start (spec.items), so when the DTD would keep
-    # the transaction local its lease request is OA-broadcast *at start*
-    # and the request round + the owner's in-flight commit drain overlap
-    # the transaction's own execution; commit certification still waits
-    # for both execution and enablement, so safety is untouched.
-    handoff: str = "drain"
+    # Ownership handoff.  "pipelined" (default) is the Zeus-style overlap:
+    # the footprint is known at start (spec.items), so when the DTD would
+    # keep the transaction local its lease request is OA-broadcast *at
+    # start* and the request round + the owner's in-flight commit drain
+    # overlap the transaction's own execution; commit certification still
+    # waits for both execution and enablement, so safety is untouched (the
+    # explorer's CI grid model-checks both handoffs violation-free, and
+    # benchmarks/handoff.py pins pipelined >= drain across the locality x
+    # contention grid).  "drain" is the paper's ordering — execute, then
+    # request leases, then wait for the owner's LORs to drain — kept as
+    # the fallback knob and the oracle for the overlap's equivalence tests.
+    handoff: str = "pipelined"
     # Commit-phase slot cost.  "amortized" (default, batched mode only):
     # the group of transactions enabled together occupies ONE worker slot
     # for cert_fixed_ms + len(group) * cert_per_txn_ms — simulated

@@ -178,6 +178,7 @@ def price_moe_dispatch(
     d_expert: int,
     ep_degree: int,
     *,
+    tp_degree: int = 1,
     bytes_per_elem: float = 2.0,
     link_bw: float = ICI_BW,
     n_links: int = ICI_LINKS,
@@ -191,10 +192,21 @@ def price_moe_dispatch(
     (``3 × n_experts × d_model × d_expert`` elements, same fraction).
     Token traffic scales with batch, weight traffic doesn't — so dispatch
     wins at serving batch sizes and the crossover tracks ``ep_degree``.
+
+    ``tp_degree`` > 1 is the chunked (deepseek-style) layout where each
+    expert's FFN is split ``tp``-ways over the model ranks: every routed
+    token is dispatched to all ``tp`` chunk ranks of its expert group and
+    comes back as ``tp`` f-slice partials that the sender psums — the
+    partial-activation psum term — so both a2a legs scale by ``tp_degree``
+    while the off-device fraction is taken over all ``ep × tp`` shards.
+    At ``tp_degree == 1`` this reduces to the whole-expert formula.
     """
-    off_device = (ep_degree - 1) / ep_degree if ep_degree > 1 else 0.0
+    tp_degree = max(1, int(tp_degree))
+    shards = ep_degree * tp_degree
+    off_device = (shards - 1) / shards if shards > 1 else 0.0
     dispatch_bytes = (
-        2.0 * tokens_per_device * top_k * d_model * bytes_per_elem * off_device
+        2.0 * tokens_per_device * top_k * d_model * bytes_per_elem
+        * tp_degree * off_device
     )
     allgather_bytes = (
         3.0 * n_experts * d_model * d_expert * bytes_per_elem * off_device
@@ -205,6 +217,6 @@ def price_moe_dispatch(
         allgather_s=allgather_bytes / bw,
         dispatch_bytes=dispatch_bytes,
         allgather_bytes=allgather_bytes,
-        # ep_degree == 1: every expert is already local — nothing migrates
-        prefer_dispatch=ep_degree > 1 and dispatch_bytes <= allgather_bytes,
+        # one shard: every expert is already whole and local — nothing migrates
+        prefer_dispatch=shards > 1 and dispatch_bytes <= allgather_bytes,
     )

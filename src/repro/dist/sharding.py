@@ -281,3 +281,52 @@ def cache_shardings(
         cache_pspecs(cfg, mesh, tree, batch),
         is_leaf=lambda s: isinstance(s, P),
     )
+
+
+# ---------------------------------------------------------------------------
+# Planner score mesh: shard the [class, target] matrix over the pod's devices
+# ---------------------------------------------------------------------------
+
+PLAN_AXIS = "plan"
+
+
+def make_plan_mesh(n_devices: Optional[int] = None) -> Optional[Mesh]:
+    """1-D mesh for sharding planner move-scoring over the local devices.
+
+    The ``[class, target]`` score matrix of :func:`repro.plan.score.
+    score_moves` splits on its class axis — classes are independent rows —
+    so the pow2-padded class dim shards evenly over any pow2 device count.
+    Returns ``None`` on a single device (plain jit is strictly cheaper than
+    a one-device mesh): callers treat ``None`` as "score unsharded".
+    """
+    devs = jax.devices()
+    n = len(devs) if n_devices is None else min(n_devices, len(devs))
+    # largest pow2 ≤ n: the class axis is pow2-padded, so a pow2 mesh always
+    # divides it (the guard in plan_score_shardings stays for odd caps)
+    while n & (n - 1):
+        n &= n - 1
+    if n <= 1:
+        return None
+    import numpy as np
+
+    return Mesh(np.asarray(devs[:n]), (PLAN_AXIS,))
+
+
+def plan_score_shardings(
+    mesh: Mesh, n_classes: int
+) -> Optional[Dict[str, NamedSharding]]:
+    """Input shardings for ``_score_moves_jit`` on a plan mesh.
+
+    Class-indexed arrays shard their leading (class) axis; the ``cpu``
+    vector (node-indexed) is replicated.  Returns ``None`` when the padded
+    class count doesn't divide over the mesh (callers fall back to
+    unsharded scoring rather than resharding mid-epoch).
+    """
+    size = int(dict(mesh.shape)[PLAN_AXIS])
+    if size <= 1 or n_classes % size:
+        return None
+    row = NamedSharding(mesh, P(PLAN_AXIS, None))
+    vec = NamedSharding(mesh, P(PLAN_AXIS))
+    rep = NamedSharding(mesh, P())
+    return {"rates": row, "owner": vec, "fwd_cost": vec, "move_cost": vec,
+            "cpu": rep, "co_adv": row}

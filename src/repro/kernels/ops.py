@@ -71,6 +71,20 @@ def settle_lease_batch(head_req, head_proc, head_active, qlen, fresh_blocked,
         jnp.asarray(wait_cc, jnp.int32), jnp.int32(proc))
 
 
+def moe_combine(back, tok_slot, gate_slot, *, tp: int, capacity: int,
+                t_out: int, backend: str = "auto"):
+    """Partial-activation psum + gated scatter closing the MoE a2a combine
+    leg (``repro.models.moe._moe_local_a2a``): sums the ``tp`` f-slice
+    partials per expert-group slot, then scatters gated rows to tokens.
+    Runs inside ``shard_map``, so it must stay traceable — no jit wrapper
+    of its own; the jnp oracle is the dispatch on every backend (hook
+    point for a fused Pallas scatter later).
+    """
+    del backend  # single path for now; kept for API symmetry
+    return ref.moe_combine_ref(back, tok_slot, gate_slot, tp=tp,
+                               capacity=capacity, t_out=t_out)
+
+
 @jax.jit
 def _lease_validate_ref_jit(store_versions, read_items, read_versions,
                             write_locks, write_items):

@@ -67,6 +67,34 @@ def lease_settle_ref(
     return owner, free, enabled
 
 
+# --- MoE combine oracle --------------------------------------------------------
+
+def moe_combine_ref(
+    back: jax.Array,          # [ep * tp * capacity, d] returned partials
+    tok_slot: jax.Array,      # [ep * capacity] int32, t_out when empty
+    gate_slot: jax.Array,     # [ep * capacity] f32, 0 when empty
+    *,
+    tp: int,
+    capacity: int,
+    t_out: int,
+) -> jax.Array:
+    """Combine leg of the tp-aware MoE a2a: the partial-activation psum.
+
+    Each expert-group slot came back as ``tp`` f-slice partials (one per
+    chunk rank, contiguous blocks of ``capacity`` rows per rank); gate each
+    partial, sum over the tp blocks, and scatter the rows to their owning
+    token rows.  Gating *before* the sum mirrors the replicated path's
+    ``(h @ wd) * gate`` → psum association (``repro.models.moe._moe_local``)
+    so the two paths agree to the same float-order; at ``tp == 1`` this
+    degenerates to the plain gated scatter of the whole-expert path.
+    """
+    d = back.shape[-1]
+    gate = gate_slot.reshape(-1, 1, capacity, 1).astype(back.dtype)
+    gated = (back.reshape(-1, tp, capacity, d) * gate).sum(axis=1)
+    return jnp.zeros((t_out, d), back.dtype).at[tok_slot].add(
+        gated.reshape(-1, d), mode="drop")
+
+
 # --- lease-validate oracle -----------------------------------------------------
 
 def lease_validate_ref(

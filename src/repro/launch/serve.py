@@ -81,9 +81,11 @@ def main(argv=None) -> dict:
                             seq_shards=seq_shards)
     planner = None
     if args.plan_epoch_ms > 0:
+        from repro.dist.sharding import make_plan_mesh
         from repro.plan import PlacementPlanner
         planner = PlacementPlanner.for_serving(
-            args.pods, args.sessions, epoch_ms=args.plan_epoch_ms)
+            args.pods, args.sessions, epoch_ms=args.plan_epoch_ms,
+            mesh=make_plan_mesh())
     eng = MultiPodEngine(args.pods, backend, router, planner=planner)
     rng = np.random.default_rng(args.seed)
     submitted = 0

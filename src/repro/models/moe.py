@@ -267,24 +267,43 @@ def moe_sharded(
 def _moe_local_a2a(
     x_loc: jax.Array,             # [T_loc, d] (this device's token shard)
     router: jax.Array,            # [d, E]
-    wg: jax.Array, wu: jax.Array, wd: jax.Array,   # [n_e, d, f] / [n_e, f, d]
+    wg: jax.Array, wu: jax.Array, wd: jax.Array,   # [n_e, d, f_c] / [n_e, f_c, d]
     *,
     cfg: ModelConfig,
+    axes: Tuple[str, ...],        # token-shard axes, major to minor
+    axis_sizes: Tuple[int, ...],
     model_axis: str,
     model_size: int,
     capacity: int,
+    t_valid: int,                 # global tokens that are real (rest is pad)
 ) -> jax.Array:
-    """Per-device body: route my tokens, a2a them to their expert owners,
-    FFN there, a2a the outputs back, combine with my gates.
+    """Per-device body: route my tokens, a2a them to their expert *chunks*,
+    partial FFN there, a2a the partial activations back, psum-combine.
 
-    Requires ``tp == 1`` (each model rank owns whole experts), so the pair
-    of ``all_to_all`` collectives is the layer's entire wire traffic —
-    exactly the ``dispatch_bytes`` term of ``price_moe_dispatch``.
-    ``capacity`` bounds the routed rows per (source, destination) pair.
+    tp-aware: model rank ``m`` owns chunk ``m`` of the EP×TP layout —
+    experts ``(m // tp) * n_e + [0, n_e)`` restricted to f-slice ``m % tp``.
+    A routed token is dispatched to all ``tp`` ranks of its expert's chunk
+    group; each computes the f-slice partial ``(silu(x·wg)·(x·wu))·wd``
+    (full d, partial sum over f), and the return a2a lands the ``tp``
+    partials back in the sender's per-group slot where
+    :func:`repro.kernels.ops.moe_combine` sums them — the partial-
+    activation psum of the combine leg, materialized as a block-sum so the
+    two ``all_to_all`` legs stay the layer's entire wire traffic (priced
+    by ``price_moe_dispatch``'s ``tp_degree`` term).
+
+    Each destination block is laid out ``[n_e, cap_e]`` — sub-blocked by
+    the chunk's local expert — so the receiver selects each expert's rows
+    with a reshape instead of a masked pass over the whole buffer, and no
+    expert-id metadata crosses the wire.  ``capacity = n_e * cap_e`` bounds
+    the routed rows per (source, expert) pair at ``cap_e``; token rows at
+    global index ≥ ``t_valid`` are ragged-batch padding and are never
+    dispatched.
     """
+    from repro.kernels import ops as kops
+
     m = cfg.moe
     ep, tp, n_e, _ = chunk_plan(m.n_experts, model_size)
-    assert tp == 1, "a2a dispatch needs whole experts per model rank"
+    cap_e = capacity // n_e                               # per (src, expert)
     t_loc, d = x_loc.shape
     acc_dt = x_loc.dtype
     logits = x_loc.astype(jnp.float32) @ router.astype(jnp.float32)
@@ -293,51 +312,76 @@ def _moe_local_a2a(
 
     flat_ids = ids.reshape(-1)                            # [T*K]
     flat_gates = gates.reshape(-1)
-    dest = flat_ids // n_e                                # owning ep rank
+    grp = flat_ids // n_e                                 # owning ep group
     le = flat_ids % n_e                                   # its local expert
     token_of = jnp.arange(t_loc * m.top_k, dtype=jnp.int32) // m.top_k
-    # per-destination arrival slot (for capacity bounding), like the
-    # replicated path's per-expert slots
-    onehot = jax.nn.one_hot(dest, ep, dtype=jnp.int32)
-    slot = jnp.cumsum(onehot, axis=0) - onehot            # [T*K, ep]
+    # ragged batches pad the flattened token axis up to the shard multiple;
+    # the pad rows live at the tail of the global order — mask them out of
+    # dispatch so they neither consume capacity nor pollute the psum
+    shard = jnp.zeros((), jnp.int32)
+    for a, n in zip(axes, axis_sizes):
+        shard = shard * n + jax.lax.axis_index(a)
+    valid = (shard * t_loc + token_of) < t_valid
+    # per-expert arrival slot (for capacity bounding), exactly the
+    # replicated path's slots; all tp copies of a token share one slot
+    onehot = jax.nn.one_hot(flat_ids, m.n_experts, dtype=jnp.int32) \
+        * valid[:, None]
+    slot = jnp.cumsum(onehot, axis=0) - onehot            # [T*K, E]
     slot_d = jnp.sum(slot * onehot, axis=1)
-    keep = slot_d < capacity
-    row = jnp.where(keep, dest * capacity + slot_d, ep * capacity)
+    keep = (slot_d < cap_e) & valid
 
-    nbuf = ep * capacity
-    send_x = jnp.zeros((nbuf + 1, d), x_loc.dtype).at[row].set(
-        jnp.take(x_loc, token_of, axis=0), mode="drop")[:nbuf]
-    send_le = jnp.full((nbuf + 1,), n_e, jnp.int32).at[row].set(
-        jnp.where(keep, le, n_e), mode="drop")[:nbuf]
-    # sender-side combine metadata — never crosses the wire
-    tok_slot = jnp.full((nbuf + 1,), t_loc, jnp.int32).at[row].set(
-        jnp.where(keep, token_of, t_loc), mode="drop")[:nbuf]
-    gate_slot = jnp.zeros((nbuf + 1,), jnp.float32).at[row].set(
-        jnp.where(keep, flat_gates, 0.0), mode="drop")[:nbuf]
+    nbuf = model_size * capacity                          # = ep * tp * capacity
+    send_x = jnp.zeros((nbuf + 1, d), x_loc.dtype)
+    x_routed = jnp.take(x_loc, token_of, axis=0)
+    sub = le * cap_e + slot_d                             # expert sub-block
+    for j in range(tp):                                   # tp dest copies
+        row = jnp.where(keep, (grp * tp + j) * capacity + sub, nbuf)
+        send_x = send_x.at[row].set(x_routed, mode="drop")
+    send_x = send_x[:nbuf]
+    # sender-side combine metadata, per (group, expert-slot) — never
+    # crosses the wire
+    crow = jnp.where(keep, grp * capacity + sub, ep * capacity)
+    tok_slot = jnp.full((ep * capacity + 1,), t_loc, jnp.int32).at[crow].set(
+        jnp.where(keep, token_of, t_loc), mode="drop")[:ep * capacity]
+    gate_slot = jnp.zeros((ep * capacity + 1,), jnp.float32).at[crow].set(
+        jnp.where(keep, flat_gates, 0.0), mode="drop")[:ep * capacity]
 
     recv_x = jax.lax.all_to_all(send_x, model_axis, 0, 0, tiled=True)
-    recv_le = jax.lax.all_to_all(send_le, model_axis, 0, 0, tiled=True)
-    out = jnp.zeros((nbuf, d), acc_dt)
+    # each source block arrives sub-blocked [n_e, cap_e]: slicing an
+    # expert's rows is a transpose of the reshape, not a masked pass —
+    # every recv row runs exactly one expert's FFN, like the dense path
+    recv_e = recv_x.reshape(model_size, n_e, cap_e, d)
+    outs = []
     for e in range(n_e):
-        sel = (recv_le == e)[:, None]
-        h = jax.nn.silu(recv_x @ wg[e]) * (recv_x @ wu[e])
-        out = out + jnp.where(sel, (h @ wd[e]).astype(acc_dt),
-                              jnp.zeros((), acc_dt))
-    # the return a2a lands each expert output back in its sender's slot
+        xe = recv_e[:, e].reshape(model_size * cap_e, d)
+        h = jax.nn.silu(xe @ wg[e]) * (xe @ wu[e])           # [.., f_c]
+        outs.append((h @ wd[e]).astype(acc_dt)
+                    .reshape(model_size, cap_e, d))
+    out = jnp.stack(outs, axis=1).reshape(nbuf, d)
+    # the return a2a lands each chunk's partial output back in its sender's
+    # (group, tp, expert-slot) cell; moe_combine sums the tp partials per
+    # slot (the f-slice psum) and scatters the gated rows to their tokens
     back = jax.lax.all_to_all(out, model_axis, 0, 0, tiled=True)
-    return jnp.zeros((t_loc, d), acc_dt).at[tok_slot].add(
-        back * gate_slot[:, None].astype(acc_dt), mode="drop")
+    return kops.moe_combine(back, tok_slot, gate_slot, tp=tp,
+                            capacity=capacity, t_out=t_loc)
 
 
 def _a2a_plan(cfg: ModelConfig, t_total: int, mesh, batch_axes, model_axis):
-    """(feasible, token_shards, ep): a2a needs tp == 1 and an even split of
-    the flattened token dim over (batch axes × model axis)."""
+    """(token_shards, ep, tp, t_pad) for the a2a layout.
+
+    Any ``(n_experts, model_size)`` pair the chunk layout accepts is
+    feasible: tp > 1 dispatches to chunks with a partial psum on the
+    combine leg, and ragged token counts pad the flattened token axis up
+    to ``t_pad`` (the next shard multiple) with masked rows rather than
+    forfeiting the a2a plan to the dense fallback.
+    """
     model_size = int(mesh.shape[model_axis])
     ep, tp, _, _ = chunk_plan(cfg.moe.n_experts, model_size)
     shards = model_size
     for a in batch_axes:
         shards *= int(mesh.shape[a])
-    return (tp == 1 and t_total % shards == 0), shards, ep
+    t_pad = -(-t_total // shards) * shards
+    return shards, ep, tp, t_pad
 
 
 def moe_sharded_a2a(
@@ -351,24 +395,33 @@ def moe_sharded_a2a(
     capacity_factor: float = 1.25,
 ) -> jax.Array:
     """Token-dispatch MoE: tokens sharded over (batch × model) axes, routed
-    activations moved by a2a pairs; expert weights stay put (EP, tp=1)."""
+    activations moved by a2a pairs; expert chunks stay put (EP × TP)."""
     from jax.experimental.shard_map import shard_map
 
     m = cfg.moe
     b, s, d = x.shape
-    feasible, shards, ep = _a2a_plan(cfg, b * s, mesh, batch_axes, model_axis)
-    assert feasible, (b * s, shards, dict(mesh.shape))
-    t_loc = (b * s) // shards
-    capacity = max(8, -(-int(t_loc * m.top_k * capacity_factor) // ep))
+    shards, ep, tp, t_pad = _a2a_plan(cfg, b * s, mesh, batch_axes,
+                                      model_axis)
+    t_loc = t_pad // shards
+    # per-(source, expert) slots, sub-blocked n_e per destination rank
+    _, _, n_e, _ = chunk_plan(m.n_experts, int(mesh.shape[model_axis]))
+    cap_e = max(8, -(-int(t_loc * m.top_k * capacity_factor) // m.n_experts))
+    capacity = n_e * cap_e
     model_size = int(mesh.shape[model_axis])
+    axes = (*tuple(batch_axes), model_axis)
+    axis_sizes = tuple(int(mesh.shape[a]) for a in axes)
 
     def body(xt, router, wg, wu, wd):
         y = _moe_local_a2a(
-            xt, router, wg[0], wu[0], wd[0], cfg=cfg, model_axis=model_axis,
-            model_size=model_size, capacity=capacity)
+            xt, router, wg[0], wu[0], wd[0], cfg=cfg, axes=axes,
+            axis_sizes=axis_sizes, model_axis=model_axis,
+            model_size=model_size, capacity=capacity, t_valid=b * s)
         return y.astype(xt.dtype)
 
-    spec = P((*tuple(batch_axes), model_axis), None)
+    xt = x.reshape(b * s, d)
+    if t_pad != b * s:
+        xt = jnp.pad(xt, ((0, t_pad - b * s), (0, 0)))
+    spec = P(axes, None)
     out = shard_map(
         body, mesh=mesh,
         in_specs=(
@@ -380,9 +433,9 @@ def moe_sharded_a2a(
         ),
         out_specs=spec,
         check_rep=False,
-    )(x.reshape(b * s, d), p["router"], p["experts"]["w_gate"],
+    )(xt, p["router"], p["experts"]["w_gate"],
       p["experts"]["w_up"], p["experts"]["w_down"])
-    y = out.reshape(b, s, d)
+    y = out[:b * s].reshape(b, s, d)
     if m.n_shared:
         y = y + mlp_apply(p["shared"], x, "swiglu")
     return y
@@ -392,17 +445,18 @@ def moe_sharded_a2a(
 # Dispatch autotuning: the DTD verdict, cached per cell
 # ---------------------------------------------------------------------------
 
-# (tokens_per_device, ep_degree, layer dims) -> prefer token a2a.  One
-# pricing call per cell ever: decode/prefill shapes recur, so the verdict
-# lookup is a dict hit on the trace path.
+# (tokens_per_device, ep_degree, tp_degree, layer dims) -> prefer token
+# a2a.  One pricing call per cell ever: decode/prefill shapes recur, so the
+# verdict lookup is a dict hit on the trace path.
 _DISPATCH_CACHE: Dict[Tuple[int, ...], bool] = {}
 
 
 def dispatch_verdict(cfg: ModelConfig, tokens_per_device: int,
-                     ep_degree: int) -> bool:
-    """Cached ``price_moe_dispatch`` verdict for one (T/device, ep) cell."""
+                     ep_degree: int, tp_degree: int = 1) -> bool:
+    """Cached ``price_moe_dispatch`` verdict for one (T/device, ep, tp)
+    cell — tp > 1 prices the chunked layout's partial-activation psum."""
     m = cfg.moe
-    key = (tokens_per_device, ep_degree, cfg.d_model, m.top_k,
+    key = (tokens_per_device, ep_degree, tp_degree, cfg.d_model, m.top_k,
            m.n_experts, m.d_expert)
     v = _DISPATCH_CACHE.get(key)
     if v is None:
@@ -410,7 +464,7 @@ def dispatch_verdict(cfg: ModelConfig, tokens_per_device: int,
 
         v = price_moe_dispatch(
             tokens_per_device, cfg.d_model, m.top_k, m.n_experts,
-            m.d_expert, ep_degree).prefer_dispatch
+            m.d_expert, ep_degree, tp_degree=tp_degree).prefer_dispatch
         _DISPATCH_CACHE[key] = v
     return v
 
@@ -428,10 +482,13 @@ def moe_apply(
 
     ``dispatch``: ``"auto"`` consults the cached
     :func:`repro.dist.locality.price_moe_dispatch` verdict for this
-    (tokens_per_device, ep_degree) cell — token a2a when the routed
-    activations are lighter on the wire than replication, the
+    (tokens_per_device, ep_degree, tp_degree) cell — token a2a when the
+    routed activations are lighter on the wire than replication, the
     replicated-token path otherwise; ``"a2a"`` / ``"replicate"`` force a
-    path (a2a falls back to replicate when infeasible for the mesh/shape).
+    path.  The a2a path covers every chunk layout (tp > 1 dispatches to
+    expert chunks with a partial psum combine) and every token count
+    (ragged batches are padded and masked), so the forced path is taken
+    verbatim.
     """
     if mesh is None or mesh.shape.get("model", 1) == 1:
         return moe_ref(p, x, cfg)
@@ -442,11 +499,11 @@ def moe_apply(
         b, s, _ = x.shape
         batch_axes = tuple(kw.get("batch_axes", ("data",)))
         model_axis = kw.get("model_axis", "model")
-        feasible, shards, ep = _a2a_plan(cfg, b * s, mesh, batch_axes,
-                                         model_axis)
-        use_a2a = feasible and (
+        shards, ep, tp, t_pad = _a2a_plan(cfg, b * s, mesh, batch_axes,
+                                          model_axis)
+        use_a2a = (
             dispatch == "a2a"
-            or dispatch_verdict(cfg, (b * s) // shards, ep))
+            or dispatch_verdict(cfg, t_pad // shards, ep, tp))
     if use_a2a:
         return moe_sharded_a2a(p, x, cfg, mesh, **kw)
     return moe_sharded(p, x, cfg, mesh, **kw)

@@ -73,10 +73,14 @@ class AffinityTracker:
     def rates(self, t: float, n_classes: Optional[int] = None) -> np.ndarray:
         """Effective affinity [n_classes, n_nodes]: access minus damped
         abort rates, clipped at zero (an abort can cancel an access, not
-        turn a node repulsive below "never goes there")."""
+        turn a node repulsive below "never goes there").
+
+        float32: this is the scorer's input boundary, and the jit computes
+        in float32 regardless — handing it float64 would just put a [C, N]
+        host-side conversion on the plan epoch's kick path."""
         a = self.node.rates(t).T
         b = self.aborts.rates(t).T
-        out = np.maximum(a - self.abort_weight * b, 0.0)
+        out = np.maximum(a - self.abort_weight * b, 0.0).astype(np.float32)
         if n_classes is not None and out.shape[0] < n_classes:
             grown = np.zeros((n_classes, out.shape[1]), dtype=out.dtype)
             grown[: out.shape[0]] = out

@@ -29,7 +29,7 @@ from typing import Deque, List, Optional, Tuple
 import numpy as np
 
 from .affinity import AffinityTracker
-from .score import score_moves
+from .score import score_moves_async
 
 
 @dataclass(frozen=True)
@@ -99,12 +99,33 @@ class PlacementPlan:
         return bool(self.moves)
 
 
+@dataclass
+class PendingPlan:
+    """An in-flight epoch: scoring dispatched, bounding deferred.
+
+    Everything the bounding loop reads is snapshotted at :meth:`
+    PlacementPlanner.begin` time (epoch-stamped inputs), so however many
+    decode steps run between ``begin`` and ``finish``, the finished plan is
+    byte-identical to the plan a synchronous call would have produced at
+    the begin instant.  ``scores`` is the un-materialized jax dispatch;
+    ``view`` stamps the membership view for purge invalidation.
+    """
+
+    epoch: int
+    view: int
+    c: int
+    owner: "np.ndarray"
+    state_bytes: "np.ndarray"
+    scores: object          # jax.Array future ([cap, N]); None when c == 0
+
+
 class PlacementPlanner:
     """The decision half of the loop: affinity in, bounded plan out."""
 
     def __init__(self, n_nodes: int, n_classes: int,
                  cfg: Optional[PlanConfig] = None, *,
-                 grow: bool = False, track_co: bool = False) -> None:
+                 grow: bool = False, track_co: bool = False,
+                 mesh=None) -> None:
         self.cfg = cfg or PlanConfig()
         self.n_nodes = n_nodes
         self.affinity = AffinityTracker(
@@ -116,16 +137,22 @@ class PlacementPlanner:
         self._history: Deque[Tuple[int, int, int, int]] = deque()
         self.planned_moves = 0
         self.planned_bytes = 0.0
+        # plan mesh for sharded scoring (None: plain jit); membership view
+        # counter + bounded purge log for invalidating in-flight plans
+        self.mesh = mesh
+        self._view = 0
+        self._purge_log: Deque[Tuple[int, int]] = deque(maxlen=256)
 
     @classmethod
     def for_serving(cls, n_pods: int, n_sessions: int,
-                    epoch_ms: Optional[float] = None) -> "PlacementPlanner":
+                    epoch_ms: Optional[float] = None, *,
+                    mesh=None) -> "PlacementPlanner":
         """The serving-stack construction (growable session space, pinned
         ``SERVE_PLAN_DEFAULTS``, optional epoch override) — the one used by
         ``launch/serve.py`` and the benches."""
         cfg = SERVE_PLAN_DEFAULTS if epoch_ms is None else \
             replace(SERVE_PLAN_DEFAULTS, epoch_ms=epoch_ms)
-        return cls(n_pods, n_sessions, cfg, grow=True)
+        return cls(n_pods, n_sessions, cfg, grow=True, mesh=mesh)
 
     # -- view change ---------------------------------------------------------
     def purge_node(self, node: int) -> None:
@@ -139,16 +166,23 @@ class PlacementPlanner:
         the bounded plan (top-K slots, byte budget) on them and not
         blocking the survivors.  Idempotent: every surviving replica's
         view-change handler may call it.
+
+        Also bumps the membership view: a :class:`PendingPlan` begun before
+        this purge scored against the dead node's affinity rows, so
+        :meth:`finish` drops its moves that name the node (the async
+        epoch's invalidation seam).
         """
         self.affinity.purge_node(node)
         self._history = deque(
             h for h in self._history if h[2] != node and h[3] != node)
+        self._view += 1
+        self._purge_log.append((self._view, node))
 
     # -- hysteresis ----------------------------------------------------------
-    def _reverses_recent(self, cc: int, dst: int) -> bool:
+    def _reverses_recent(self, cc: int, dst: int, epoch: int) -> bool:
         w = self.cfg.hysteresis_epochs
         for (ep, c, src, _d) in self._history:
-            if c == cc and src == dst and self.epoch - ep < w:
+            if c == cc and src == dst and epoch - ep < w:
                 return True
         return False
 
@@ -158,7 +192,7 @@ class PlacementPlanner:
             self._history.popleft()
 
     # -- the plan ------------------------------------------------------------
-    def plan(
+    def begin(
         self,
         now: float,
         owner: np.ndarray,          # [C] int, -1 = unowned (skipped)
@@ -166,14 +200,24 @@ class PlacementPlanner:
         fwd_cost: np.ndarray,       # [C] per-access forward cost
         move_cost: np.ndarray,      # [C] one-time migration cost
         cpu: np.ndarray,            # [N]
-    ) -> PlacementPlan:
+    ) -> PendingPlan:
+        """Kick one epoch's scoring; return without waiting for it.
+
+        Snapshots every input (including the decayed affinity rates at
+        ``now``) and dispatches the jit'd evaluation — sharded over
+        ``self.mesh`` when one is set — so the caller's decode steps overlap
+        the device work.  :meth:`finish` harvests; ``finish(begin(...))``
+        with nothing in between IS the synchronous plan.
+        """
         cfg = self.cfg
         self.epoch += 1
         self._prune_history()
         c = len(owner)
-        plan = PlacementPlan(epoch=self.epoch)
+        owner = np.asarray(owner, dtype=np.int32).copy()
         if c == 0:
-            return plan
+            return PendingPlan(epoch=self.epoch, view=self._view, c=0,
+                               owner=owner, state_bytes=np.zeros((0,)),
+                               scores=None)
         # pow2-pad the class axis so recurring session counts reuse the jit
         # cache (the serving session space grows dynamically)
         cap = 1
@@ -181,17 +225,42 @@ class PlacementPlanner:
             cap *= 2
         owner_p = np.full((cap,), -1, dtype=np.int32)
         owner_p[:c] = owner
-        pad = lambda a: np.pad(np.asarray(a, np.float64), (0, cap - c))
+        # float32 like the cost/rate producers: the scorer computes in
+        # float32, and float64 here would put [cap]-sized host conversions
+        # back on the kick path
+        pad = lambda a: np.pad(np.asarray(a, np.float32), (0, cap - c))
         rates = self.affinity.rates(now, cap)
         co = (self.affinity.co_rates(now, cap)
               if cfg.co_gain > 0.0 else None)
-        scores = score_moves(
+        scores = score_moves_async(
             rates, owner_p, pad(fwd_cost), pad(move_cost), cpu,
             horizon_ms=cfg.horizon_ms, margin=cfg.margin,
             min_frac=cfg.min_frac, min_rate=cfg.min_events / cfg.tau_ms,
             load_gain=cfg.load_gain,
             co_gain=cfg.co_gain, co_rates=co, max_cpu=cfg.max_cpu,
-            overload_ctrl=cfg.overload_ctrl)[:c]
+            overload_ctrl=cfg.overload_ctrl, mesh=self.mesh)
+        return PendingPlan(
+            epoch=self.epoch, view=self._view, c=c, owner=owner,
+            state_bytes=np.asarray(state_bytes, dtype=np.float64).copy(),
+            scores=scores)
+
+    def finish(self, pending: PendingPlan) -> PlacementPlan:
+        """Harvest a :meth:`begin` dispatch into the bounded plan.
+
+        Pure host work over the epoch-stamped snapshot: materialize the
+        scores (the only wait), argmax per class, rank by score per shipped
+        byte, bound by top-K / byte budget / hysteresis.  Nodes purged
+        since ``begin`` (``pending.view``) invalidate their moves — the
+        snapshot scored against a membership view that no longer exists.
+        """
+        cfg = self.cfg
+        plan = PlacementPlan(epoch=pending.epoch)
+        c = pending.c
+        if c == 0:
+            return plan
+        scores = np.asarray(pending.scores)[:c]
+        purged = {node for (v, node) in self._purge_log
+                  if v > pending.view}
 
         # one candidate per class: its argmax target
         best_n = np.argmax(scores, axis=1)
@@ -200,7 +269,7 @@ class PlacementPlanner:
         plan.n_candidates = int(cand.size)
         if not cand.size:
             return plan
-        sb = np.asarray(state_bytes, dtype=np.float64)
+        sb = pending.state_bytes
         # rank by score per shipped byte: a lease prefetch (0 bytes) beats
         # any re-home of equal score, small caches beat grown ones
         rank = best_s[cand] / np.maximum(sb[cand], 1.0)
@@ -211,16 +280,31 @@ class PlacementPlanner:
             if len(plan.moves) >= cfg.top_k:
                 break
             cc, dst = int(idx), int(best_n[idx])
-            src, bytes_ = int(owner[idx]), float(sb[idx])
+            src, bytes_ = int(pending.owner[idx]), float(sb[idx])
+            if src in purged or dst in purged:
+                continue
             if spent[dst] + bytes_ > cfg.node_budget_bytes:
                 continue
-            if self._reverses_recent(cc, dst):
+            if self._reverses_recent(cc, dst, pending.epoch):
                 continue
             plan.moves.append(PlannedMove(
                 cc=cc, src=src, dst=dst, state_bytes=bytes_,
                 score=float(best_s[idx])))
             spent[dst] += bytes_
         return plan
+
+    def plan(
+        self,
+        now: float,
+        owner: np.ndarray,
+        state_bytes: np.ndarray,
+        fwd_cost: np.ndarray,
+        move_cost: np.ndarray,
+        cpu: np.ndarray,
+    ) -> PlacementPlan:
+        """Synchronous epoch: ``finish(begin(...))`` at zero distance."""
+        return self.finish(self.begin(
+            now, owner, state_bytes, fwd_cost, move_cost, cpu))
 
     def committed(self, moves: List[PlannedMove]) -> None:
         """Record the moves a consumer actually executed.

@@ -55,14 +55,16 @@ def price_move_costs(
     Returns ``(fwd_cost_s, move_cost_s)`` — the per-access forward time and
     the one-time state-migration time of every class, elementwise equal to
     ``price_session_dispatch(...).migrate_work_s`` / ``.migrate_state_s``
-    for the same inputs (tests pin the parity).
+    for the same inputs (tests pin the parity).  float32 out: these feed
+    the float32 scorer directly — float64 would put two [C] host-side
+    conversions on the plan epoch's kick path.
     """
     seq_shards = max(1.0, float(seq_shards))
     state_bytes = np.asarray(state_bytes, dtype=np.float64)
     work_bytes = np.asarray(work_bytes, dtype=np.float64)
     fwd_cost_s = rtt_s + work_bytes / dcn_bw
     move_cost_s = rtt_s + (state_bytes / seq_shards + handoff_bytes) / dcn_bw
-    return fwd_cost_s, move_cost_s
+    return (fwd_cost_s.astype(np.float32), move_cost_s.astype(np.float32))
 
 
 @functools.partial(
@@ -108,7 +110,7 @@ def _score_moves_jit(
     return jnp.where(mask, score, NEG_INF)
 
 
-def score_moves(
+def score_moves_async(
     rates: np.ndarray,
     owner: np.ndarray,
     fwd_cost: np.ndarray,
@@ -124,8 +126,19 @@ def score_moves(
     co_rates: Optional[np.ndarray] = None,
     max_cpu: float = 0.9,
     overload_ctrl: bool = True,
-) -> np.ndarray:
-    """Score all [class, target] moves in ONE jit'd evaluation."""
+    mesh=None,
+) -> jax.Array:
+    """Dispatch the [class, target] scoring and return WITHOUT materializing.
+
+    The returned ``jax.Array`` is a future under jax's async dispatch: the
+    caller keeps doing host work (decode steps) while the evaluation runs,
+    and pays the wait only at ``np.asarray`` time — the harvest half of the
+    planner's overlapped epochs.  ``mesh`` (a 1-D plan mesh from
+    :func:`repro.dist.sharding.make_plan_mesh`) shards the class axis over
+    the pod's devices; sharded and unsharded evaluations compute the same
+    elementwise math, so the result is byte-identical either way and the
+    mesh is a pure throughput knob.
+    """
     c, n = np.asarray(rates).shape
     owner = np.asarray(owner, dtype=np.int32)
     if co_rates is not None and co_gain != 0.0:
@@ -139,17 +152,41 @@ def score_moves(
                             0.0)
         co_adv = m - at_owner[:, None]
     else:
-        co_adv = np.zeros((c, n), dtype=np.float64)
-    out = _score_moves_jit(
-        jnp.asarray(rates, jnp.float32), jnp.asarray(owner),
-        jnp.asarray(fwd_cost, jnp.float32), jnp.asarray(move_cost, jnp.float32),
-        jnp.asarray(cpu, jnp.float32), jnp.asarray(co_adv, jnp.float32),
+        # no co-tracking: a [1, 1] zero broadcasts inside the jit — putting
+        # a dead [C, N] zeros array on the kick path would cost more host
+        # time than the whole dispatch
+        co_adv = np.zeros((1, 1), dtype=np.float64)
+    args = {
+        "rates": jnp.asarray(rates, jnp.float32),
+        "owner": jnp.asarray(owner),
+        "fwd_cost": jnp.asarray(fwd_cost, jnp.float32),
+        "move_cost": jnp.asarray(move_cost, jnp.float32),
+        "cpu": jnp.asarray(cpu, jnp.float32),
+        "co_adv": jnp.asarray(co_adv, jnp.float32),
+    }
+    if mesh is not None:
+        from repro.dist.sharding import plan_score_shardings
+
+        shardings = plan_score_shardings(mesh, c)
+        if shardings is not None:
+            if args["co_adv"].shape[0] == 1:    # broadcast stub: replicate
+                shardings = dict(shardings, co_adv=shardings["cpu"])
+            args = {k: jax.device_put(v, shardings[k])
+                    for k, v in args.items()}
+    return _score_moves_jit(
+        args["rates"], args["owner"], args["fwd_cost"], args["move_cost"],
+        args["cpu"], args["co_adv"],
         horizon_ms=float(horizon_ms), margin=float(margin),
         min_frac=float(min_frac), min_rate=float(min_rate),
         load_gain=float(load_gain),
         co_gain=float(co_gain), max_cpu=float(max_cpu),
         overload_ctrl=bool(overload_ctrl))
-    return np.asarray(out)
+
+
+def score_moves(*args, **kwargs) -> np.ndarray:
+    """Score all [class, target] moves in ONE jit'd evaluation (blocking:
+    dispatch + materialize — ``score_moves_async`` split at zero distance)."""
+    return np.asarray(score_moves_async(*args, **kwargs))
 
 
 def score_moves_np(

@@ -27,6 +27,7 @@ The router's constraint-(3) panic-acquire is disabled in this mode
 from __future__ import annotations
 
 import dataclasses
+import time
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -173,6 +174,9 @@ class EngineMetrics:
     plan_moves: int = 0          # planned session re-homes executed
     plan_prefetches: int = 0     # planned zero-byte lease prefetches
     plan_bytes: float = 0.0      # state shipped by planned moves
+    plan_block_s: float = 0.0    # host wall-time planning spent ON the token
+    # path (begin dispatch + finish harvest; sync mode pays the full
+    # scoring wait here, async mode only the dispatch + a drained harvest)
     # certification counters live in the StepCertifier (single source of
     # truth); as_dict merges them when the engine links it here
     cert: Optional[object] = None
@@ -188,6 +192,7 @@ class EngineMetrics:
             "plan_epochs": self.plan_epochs, "plan_moves": self.plan_moves,
             "plan_prefetches": self.plan_prefetches,
             "plan_GB": self.plan_bytes / 1e9,
+            "plan_block_s": self.plan_block_s,
         }
         if self.cert is not None:
             out.update(self.cert.as_dict())
@@ -197,7 +202,8 @@ class EngineMetrics:
 class MultiPodEngine:
     def __init__(self, n_pods: int, backend, router: LocalityRouter,
                  certifier: Optional[StepCertifier] = None,
-                 planner=None, sanitize: bool = False) -> None:
+                 planner=None, sanitize: bool = False,
+                 plan_async: bool = True) -> None:
         self.n_pods = n_pods
         self.backend = backend
         self.router = router
@@ -209,9 +215,15 @@ class MultiPodEngine:
             self.certifier.owner_of = \
                 lambda sid: self.router.owner.get(sid, -1)
         # optional proactive placement planner (repro.plan): shares the
-        # router's clock/stats implementation and takes over rebalancing
+        # router's clock/stats implementation and takes over rebalancing.
+        # plan_async overlaps each epoch's scoring with the following
+        # decode step (kick at the epoch boundary, harvest at the next
+        # step's start); the plan is byte-identical to synchronous mode
+        # because every input is snapshotted at the kick
         self.planner = planner
+        self.plan_async = plan_async
         self._plan_clock_ms = 0.0
+        self._pending_plan = None
         if planner is not None:
             router.planned = True
             router.affinity = planner.affinity
@@ -313,6 +325,12 @@ class MultiPodEngine:
     def run_step(self) -> None:
         """One decode step on every pod over its queued sessions."""
         m = self.metrics
+        # harvest the plan kicked at the previous step's epoch boundary:
+        # its scoring ran on-device while that whole step decoded, so the
+        # wait here is (near) zero — the overlapped epoch's landing point
+        if self._pending_plan is not None:
+            pending, self._pending_plan = self._pending_plan, None
+            self._harvest_plan_epoch(pending)
         step_t = 0.0
         for pod in range(self.n_pods):
             # inbound KV/requests must land before the pod decodes them
@@ -372,14 +390,22 @@ class MultiPodEngine:
             self._plan_clock_ms += dt_ms
             if self._plan_clock_ms >= self.planner.cfg.epoch_ms:
                 self._plan_clock_ms = 0.0
-                self._run_plan_epoch()
+                if self.plan_async:
+                    # kick now, harvest at the next step's start: the jit'd
+                    # scoring overlaps the coming decode step instead of
+                    # stalling the loop here
+                    self._pending_plan = self._begin_plan_epoch()
+                else:
+                    self._harvest_plan_epoch(self._begin_plan_epoch())
 
     # -- proactive placement (repro.plan) -----------------------------------
-    def _run_plan_epoch(self) -> None:
-        """Score all [session, pod] moves in one jit'd evaluation and
-        execute the bounded plan between steps (off the critical path)."""
+    def _begin_plan_epoch(self):
+        """Snapshot the epoch's inputs and dispatch the [session, pod]
+        scoring (one jit'd evaluation, mesh-sharded when the planner holds
+        a plan mesh) without waiting on it."""
         from repro.plan.score import price_move_costs
 
+        t0 = time.perf_counter()
         r = self.router
         self.metrics.plan_epochs += 1
         n_cls = r.affinity.node.n_cols
@@ -392,8 +418,20 @@ class MultiPodEngine:
         work = np.full((n_cls,), r.request_bytes + r.response_bytes)
         fwd_cost, move_cost = price_move_costs(
             state, work, seq_shards=r.seq_shards)
-        plan = self.planner.plan(r._now, owner, state, fwd_cost, move_cost,
-                                 r.cpu)
+        pending = self.planner.begin(r._now, owner, state, fwd_cost,
+                                     move_cost, r.cpu)
+        self.metrics.plan_block_s += time.perf_counter() - t0
+        return pending
+
+    def _harvest_plan_epoch(self, pending) -> None:
+        """Materialize a kicked epoch's plan and execute it between steps
+        (off the critical path).  Staleness guards re-check live ownership:
+        a session acquired away (or evicted) since the kick keeps its
+        snapshot move from firing."""
+        r = self.router
+        t0 = time.perf_counter()
+        plan = self.planner.finish(pending)
+        self.metrics.plan_block_s += time.perf_counter() - t0
         executed = []
         for mv in plan.moves:
             if r.owner.get(mv.cc) == mv.src and mv.src != mv.dst:

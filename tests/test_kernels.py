@@ -155,3 +155,32 @@ def test_stm_batched_validation_matches_kernel():
         jnp.asarray(vers), jnp.zeros((500,), jnp.int32),
         jnp.full((len(txns), 1), -1, jnp.int32), block_txns=16, chunk=128)
     np.testing.assert_array_equal(np.asarray(kern), loop)
+
+
+@pytest.mark.parametrize("ep,tp,capacity,t_out", [
+    (4, 1, 8, 16),    # mixtral-style: whole experts, no psum
+    (2, 2, 8, 16),    # deepseek-style: tp partials summed per slot
+    (2, 4, 4, 8),
+])
+def test_moe_combine_vs_ref(ep, tp, capacity, t_out):
+    """ops.moe_combine (the a2a combine leg's partial-activation psum)
+    against an independent numpy oracle: gate each tp partial, sum the tp
+    f-slice partials per (group, slot), scatter-add to the slot's token."""
+    from repro.kernels import ops
+
+    d = 12
+    back = RNG.standard_normal((ep * tp * capacity, d)).astype(np.float32)
+    # slot -> token map; index t_out marks an empty slot (dropped)
+    tok_slot = RNG.integers(0, t_out + 1, ep * capacity).astype(np.int32)
+    gate_slot = (RNG.random(ep * capacity).astype(np.float32)
+                 * (tok_slot < t_out))
+    got = np.asarray(ops.moe_combine(
+        jnp.asarray(back), jnp.asarray(tok_slot), jnp.asarray(gate_slot),
+        tp=tp, capacity=capacity, t_out=t_out))
+    gated = (back.reshape(ep, tp, capacity, d)
+             * gate_slot.reshape(ep, 1, capacity, 1)).sum(axis=1)
+    want = np.zeros((t_out, d), np.float32)
+    for i, t in enumerate(tok_slot):
+        if t < t_out:
+            want[t] += gated.reshape(-1, d)[i]
+    np.testing.assert_allclose(got, want, atol=1e-5, rtol=1e-5)

@@ -176,6 +176,66 @@ def test_planner_idle_without_evidence():
     assert not plan.moves and plan.n_candidates == 0
 
 
+def test_async_plan_byte_identical_to_sync():
+    """begin() epoch-stamps every input (affinity rates, owner, state
+    bytes), so a plan finished after arbitrary mid-epoch mutation — new
+    affinity events, the caller scribbling over its arrays — is
+    byte-identical to the synchronous plan at the begin instant."""
+    rng = np.random.default_rng(5)
+    n, c = 4, 24
+    counts = rng.random((n, c)) * 40.0
+    cfg = PlanConfig(top_k=8, margin=0.0, min_frac=0.0, min_events=0.0,
+                     node_budget_bytes=np.inf)
+    p_sync = _planner_with_counts(counts, cfg)
+    p_async = _planner_with_counts(counts.copy(), cfg)
+    owner = rng.integers(0, n, c).astype(np.int32)
+    state = rng.random(c) * 1e6
+    fwd, mv = price_move_costs(state, np.full(c, 5120.0))
+    cpu = rng.random(n) * 0.5
+    want = p_sync.plan(0.0, owner, state, fwd, mv, cpu)
+    assert want.moves                       # a vacuous identity proves nothing
+
+    pending = p_async.begin(0.0, owner, state, fwd, mv, cpu)
+    # mid-epoch: decode steps record fresh affinity, the caller reuses its
+    # buffers — none of it may leak into the already-begun epoch
+    p_async.affinity.record_touch(0.0, 1, tuple(range(c)))
+    owner[:] = -1
+    state[:] = 0.0
+    got = p_async.finish(pending)
+    key = lambda pl: [(m.cc, m.src, m.dst, m.state_bytes, m.score)
+                      for m in pl.moves]
+    assert key(got) == key(want)
+    assert (got.epoch, got.n_candidates) == (want.epoch, want.n_candidates)
+
+
+def test_async_plan_view_change_invalidates_purged_nodes():
+    """purge_node between begin and finish bumps the membership view: the
+    pending plan's moves naming the purged node (as src or dst) are
+    dropped at harvest, moves between survivors land untouched."""
+    n, c = 3, 2
+    cfg = PlanConfig(top_k=4, margin=0.0, min_frac=0.0, min_events=0.0,
+                     node_budget_bytes=np.inf)
+    counts = np.zeros((n, c))
+    counts[1, 0] = 50.0     # class 0 (owned by 0) is hot at node 1
+    counts[2, 1] = 50.0     # class 1 (owned by 0) is hot at node 2
+    p = _planner_with_counts(counts, cfg)
+    owner = np.zeros(c, np.int32)
+    state = np.zeros(c)
+    fwd, mv = np.full(c, 1e-3), np.zeros(c)
+    cpu = np.zeros(n)
+
+    pending = p.begin(0.0, owner, state, fwd, mv, cpu)
+    p.purge_node(1)                         # mid-epoch view change
+    plan = p.finish(pending)
+    assert [(m.cc, m.dst) for m in plan.moves] == [(1, 2)]
+
+    # a purge BEFORE begin is part of the epoch's view — nothing to drop,
+    # and the purged node's zeroed affinity no longer attracts anyway
+    pending = p.begin(0.0, owner, state, fwd, mv, cpu)
+    plan = p.finish(pending)
+    assert [(m.cc, m.dst) for m in plan.moves] == [(1, 2)]
+
+
 # ---------------------------------------------------------------------------
 # Affinity tracker
 # ---------------------------------------------------------------------------

@@ -332,3 +332,45 @@ def test_router_freq_decays_with_clock():
     assert cold < 1e-3 * hot
     r.evict(7)
     assert r.freq.rates(r._now)[0, 7] == 0.0
+
+
+def test_engine_async_plan_epoch_kicks_then_harvests():
+    """plan_async (the default): an epoch boundary KICKS scoring and the
+    next step's start HARVESTS it, so the pending plan is observable
+    between steps and the decode loop never stalls on the evaluation.
+    Moves land one step later than synchronous planning, with live-
+    ownership staleness re-checks at harvest — the steady-state outcome
+    (the misplaced session re-homed to its hot pod) matches
+    plan_async=False."""
+    from repro.plan import PlacementPlanner
+
+    big = get_smoke_config("mixtral-8x7b")
+
+    def run(plan_async):
+        router = LocalityRouter(2, policy="short",
+                                kv_bytes_per_token=10_000.0)
+        planner = PlacementPlanner.for_serving(2, 8)
+        eng = MultiPodEngine(2, SimBackend(big), router, planner=planner,
+                             plan_async=plan_async)
+        eng.submit(Request(sid=5, origin=0, n_tokens=1))
+        eng.run_step()                       # pod 0 takes first-touch ownership
+        saw_pending = False
+        for _ in range(40):                  # ...but pod 1 sends all traffic
+            eng.submit(Request(sid=5, origin=1, n_tokens=1))
+            eng.run_step()
+            saw_pending |= eng._pending_plan is not None
+        eng.drain()
+        return eng, saw_pending
+
+    eng_async, saw_pending = run(True)
+    assert saw_pending                       # a kicked epoch outlived its step
+    assert eng_async.metrics.plan_epochs > 0
+    assert eng_async.planner.planned_moves >= 1
+    assert eng_async.router.owner[5] == 1    # re-homed to the hot pod
+    # the on-path accounting exists and is a sliver of simulated decode
+    d = eng_async.metrics.as_dict()
+    assert d["plan_block_s"] > 0.0
+
+    eng_sync, saw_pending_sync = run(False)
+    assert not saw_pending_sync              # sync epochs never leave a pending
+    assert eng_sync.router.owner[5] == 1     # same steady state

@@ -106,6 +106,107 @@ def test_moe_a2a_matches_ref_and_autotune_picks_it():
     """)
 
 
+def test_moe_a2a_tp_chunks_match_dense_reference():
+    """tp-aware a2a: mixtral-style (ep=4, tp=1) must be bitwise against the
+    dense reference; deepseek-style (model_size > n_experts → ep=2, tp=2)
+    dispatches to expert chunks and psums the f-slice partials on the
+    combine leg — same math as the reference modulo one float
+    reassociation across the psum tree, so the band is float32-tight."""
+    _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import Mesh
+        from repro.models import moe
+        from repro.models.common import ModelConfig, MoEConfig, chunk_plan
+
+        mesh = Mesh(np.array(jax.devices()).reshape(2, 4), ("data", "model"))
+        rng = np.random.default_rng(2)
+        for style, mc, want_ep, want_tp in (
+                ("mixtral", MoEConfig(n_experts=8, top_k=2, d_expert=64), 4, 1),
+                ("deepseek", MoEConfig(n_experts=2, top_k=2, d_expert=128), 2, 2)):
+            cfg = ModelConfig(name=style, family="moe", n_layers=1,
+                              d_model=32, n_heads=2, n_kv_heads=2,
+                              head_dim=16, d_ff=64, vocab_size=64,
+                              dtype="float32", moe=mc)
+            assert chunk_plan(mc.n_experts, 4)[:2] == (want_ep, want_tp)
+            d, f = cfg.d_model, mc.d_expert
+            router = jnp.asarray(rng.standard_normal((d, mc.n_experts)) * 0.1,
+                                 jnp.float32)
+            wg = jnp.asarray(rng.standard_normal((mc.n_experts, d, f)) * 0.05,
+                             jnp.float32)
+            wu = jnp.asarray(rng.standard_normal((mc.n_experts, d, f)) * 0.05,
+                             jnp.float32)
+            wd = jnp.asarray(rng.standard_normal((mc.n_experts, f, d)) * 0.05,
+                             jnp.float32)
+            rg, ru, rd = moe.to_chunked(wg, wu, wd, model_size=1)
+            p_ref = {"router": router,
+                     "experts": {"w_gate": rg, "w_up": ru, "w_down": rd}}
+            cg, cu, cdn = moe.to_chunked(wg, wu, wd, model_size=4)
+            p_sh = {"router": router,
+                    "experts": {"w_gate": cg, "w_up": cu, "w_down": cdn}}
+            x = jnp.asarray(rng.standard_normal((8, 16, d)), jnp.float32)
+            y_ref = moe.moe_ref(p_ref, x, cfg)
+            with mesh:
+                y = moe.moe_apply(p_sh, x, cfg, mesh, dispatch="a2a",
+                                  batch_axes=("data",), capacity_factor=8.0)
+            err = float(jnp.max(jnp.abs(y - y_ref)))
+            if want_tp == 1:
+                assert err == 0.0, (style, err)      # bitwise: no psum leg
+            else:
+                scale = float(jnp.max(jnp.abs(y_ref))) + 1e-9
+                assert err / scale < 1e-6, (style, err, scale)
+            print(style, "TP CHUNK OK", err)
+        print("MOE A2A TP OK")
+    """)
+
+
+def test_moe_a2a_ragged_tokens_pad_not_fallback():
+    """Regression: a ragged token count (not a multiple of the shard grid)
+    used to silently fall back to the dense path; now the a2a plan pads the
+    flattened token axis to the next shard multiple and masks the pad rows
+    out of dispatch, so the forced-a2a result still matches the dense
+    reference exactly (tp=1 layout)."""
+    _run("""
+        import jax, jax.numpy as jnp, numpy as np
+        from jax.sharding import Mesh
+        from repro.configs import get_smoke_config
+        from repro.models import moe
+        import dataclasses
+
+        cfg = dataclasses.replace(get_smoke_config("mixtral-8x7b"),
+                                  dtype="float32")
+        m = cfg.moe
+        mesh = Mesh(np.array(jax.devices()).reshape(2, 4), ("data", "model"))
+        # 4 x 15 = 60 tokens: not a multiple of the 8-way shard grid
+        shards, ep, tp, t_pad = moe._a2a_plan(cfg, 60, mesh, ("data",),
+                                              "model")
+        assert (shards, t_pad) == (8, 64) and t_pad % shards == 0
+        rng = np.random.default_rng(3)
+        d, f = cfg.d_model, m.d_expert
+        router = jnp.asarray(rng.standard_normal((d, m.n_experts)) * 0.1,
+                             jnp.float32)
+        wg = jnp.asarray(rng.standard_normal((m.n_experts, d, f)) * 0.05,
+                         jnp.float32)
+        wu = jnp.asarray(rng.standard_normal((m.n_experts, d, f)) * 0.05,
+                         jnp.float32)
+        wd = jnp.asarray(rng.standard_normal((m.n_experts, f, d)) * 0.05,
+                         jnp.float32)
+        p_ref = {"router": router, "experts": {
+            "w_gate": wg[None], "w_up": wu[None], "w_down": wd[None]}}
+        cg, cu, cdn = moe.to_chunked(wg, wu, wd, model_size=4)
+        p_sh = {"router": router,
+                "experts": {"w_gate": cg, "w_up": cu, "w_down": cdn}}
+        x = jnp.asarray(rng.standard_normal((4, 15, d)), jnp.float32)
+        y_ref = moe.moe_ref(p_ref, x, cfg)
+        with mesh:
+            y = moe.moe_apply(p_sh, x, cfg, mesh, dispatch="a2a",
+                              batch_axes=("data",), capacity_factor=8.0)
+        err = float(jnp.max(jnp.abs(y - y_ref)))
+        assert y.shape == y_ref.shape == (4, 15, d)
+        assert err == 0.0, err
+        print("MOE A2A RAGGED OK")
+    """)
+
+
 def test_sharded_train_step_matches_single_device():
     _run("""
         import jax, jax.numpy as jnp, numpy as np, dataclasses
