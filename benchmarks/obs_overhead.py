@@ -1,0 +1,208 @@
+"""Observability overhead gate: tracing must be ~free when off, cheap when on.
+
+Two cells, each run trace-off and trace-on with identical seeds:
+
+- ``serve`` — the serve_locality smoke loop (MultiPodEngine + SimBackend +
+  LocalityRouter), i.e. every engine-side trace site: route decisions,
+  lease acquires, wire/certify/decode spans.
+- ``sim``   — a Cluster BankWorkload run with ``lease_mode="batched"``,
+  i.e. every cluster-side site (lease rounds, piggybacks, certify
+  batches, exec spans, dispatch instants).  This is the same event loop
+  ``benchmarks/lease_ops.py`` drives, with the full protocol around it.
+
+Gates (``--check``):
+
+Wall-clock A/B deltas at smoke scale are dominated by scheduler noise —
+A/A reruns of the untraced sim cell jitter by ~+/-10%, wider than both
+gates — so the gates are computed from *microbenchmarked per-site costs
+times observed event counts*, which is deterministic and tighter than
+any wall-time band CI could hold.  Raw min-of-N wall times are still
+printed/emitted for eyeballing.
+
+- **tracing-off <= 1%**: the disabled path is one predictable branch per
+  site (``tr = self.trace; if tr is not None:``).  Microbenchmark the
+  guard's per-execution cost, multiply by the number of events the
+  *traced* run recorded (a stand-in for disabled-site executions —
+  untraced runs skip payload construction entirely), divide by the
+  untraced runtime.
+- **tracing-on <= 10%**: microbenchmark one full recording site
+  (f-string track + kwargs payload + tuple append, the real per-event
+  work), multiply by the traced run's event count, divide by the
+  untraced runtime.
+- **byte-identity**: traced and untraced runs must produce identical
+  result metrics (tracing observes the schedule, never perturbs it).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+from typing import Callable, Dict, List, Tuple
+
+MAX_OFF_FRAC = 0.01   # disabled tracing: <= 1% of untraced runtime
+MAX_ON_FRAC = 0.10    # enabled tracing: <= 10% of untraced runtime
+
+
+# --------------------------------------------------------------------------
+# cells
+# --------------------------------------------------------------------------
+
+def _serve_run(*, trace: bool, pods: int, sessions: int, steps: int,
+               seed: int) -> Tuple[Dict, int]:
+    """One serve_locality-style engine run; returns (metrics, n_events)."""
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.serve.engine import MultiPodEngine, Request, SimBackend
+    from repro.serve.router import LocalityRouter
+
+    cfg = get_config("mixtral-8x7b")
+    kv_per_tok = 2.0 * 2 * cfg.n_kv_heads * cfg.head_dim * cfg.n_layers \
+        if cfg.n_kv_heads else 4096.0 * cfg.n_layers
+    router = LocalityRouter(pods, policy="short", arbitration="priced",
+                            kv_bytes_per_token=kv_per_tok)
+    eng = MultiPodEngine(pods, SimBackend(cfg), router, trace=trace)
+    rng = np.random.default_rng(seed)
+    for _ in range(steps):
+        for _ in range(2 * pods):
+            sid = int(rng.integers(sessions))
+            home = sid % pods
+            origin = home if rng.random() < 0.5 else int(rng.integers(pods))
+            eng.submit(Request(sid=sid, origin=origin, n_tokens=4))
+        eng.run_step()
+    eng.drain()
+    n_events = len(eng.trace) if eng.trace is not None else 0
+    return eng.metrics.as_dict(), n_events
+
+
+def _sim_run(*, trace: bool, duration: float, seed: int) -> Tuple[Dict, int]:
+    """One batched-lease Cluster BankWorkload run; returns (metrics, n_events)."""
+    from repro.core import BankWorkload, SimConfig, make_cluster
+
+    cfg = SimConfig(duration_ms=duration, warmup_ms=duration * 0.15,
+                    seed=seed, lease_mode="batched", trace=trace)
+    wl = BankWorkload(n_nodes=cfg.n_nodes, n_items=cfg.n_items, locality=0.9)
+    c = make_cluster("LILAC-TM-OPT", wl, cfg)
+    m = c.run()
+    n_events = len(c.trace) if c.trace is not None else 0
+    return {"throughput": c.throughput(), "reuse": m.lease_reuse_rate(),
+            "forwards": m.forwards, "aborts": m.aborts}, n_events
+
+
+def _min_time(fn: Callable[[], object], repeats: int) -> float:
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _guard_cost_s(iters: int = 1_000_000) -> float:
+    """Per-execution cost of the disabled-site pattern, minus loop overhead."""
+    tr = None
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        if tr is not None:
+            raise AssertionError  # pragma: no cover - guard is always False
+    t_guard = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        pass
+    t_empty = time.perf_counter() - t0
+    return max(0.0, (t_guard - t_empty) / iters)
+
+
+def _record_cost_s(iters: int = 200_000) -> float:
+    """Per-event cost of one full *enabled* recording site.
+
+    Includes everything the taken branch pays that the untraced run does
+    not: the f-string track, the kwargs payload dict, the method call,
+    and the tuple append — measured on a representative exec-span site.
+    """
+    from repro.obs.trace import TraceRecorder
+
+    tr = TraceRecorder()
+    node = 2
+    t0 = time.perf_counter()
+    for i in range(iters):
+        tr.span("exec", f"node{node}/t{i & 1}", float(i), 0.5, txid=i)
+    dt = time.perf_counter() - t0
+    return dt / iters
+
+
+def run_cell(name: str, run, repeats: int) -> Dict:
+    """Time one cell off and on, and assert result byte-identity."""
+    m_off, _ = run(trace=False)
+    m_on, n_events = run(trace=True)
+    assert json.dumps(m_off, sort_keys=True) == \
+        json.dumps(m_on, sort_keys=True), \
+        f"{name}: tracing perturbed results:\noff={m_off}\non={m_on}"
+    t_off = _min_time(lambda: run(trace=False), repeats)
+    t_on = _min_time(lambda: run(trace=True), repeats)
+    off_frac = _guard_cost_s() * n_events / max(t_off, 1e-9)
+    on_frac = _record_cost_s() * n_events / max(t_off, 1e-9)
+    row = {"cell": name, "t_off_s": t_off, "t_on_s": t_on,
+           "events": n_events, "off_overhead_frac": off_frac,
+           "on_overhead_frac": on_frac}
+    print(f"{name},{t_off * 1e3:.2f}ms,{t_on * 1e3:.2f}ms,"
+          f"events={n_events},off={off_frac * 100:.4f}%,"
+          f"on={on_frac * 100:.2f}%", flush=True)
+    return row
+
+
+def check(rows: List[Dict]) -> None:
+    for r in rows:
+        assert r["off_overhead_frac"] <= MAX_OFF_FRAC, (
+            f"{r['cell']}: disabled tracing costs "
+            f"{r['off_overhead_frac'] * 100:.3f}% > {MAX_OFF_FRAC * 100:.0f}% "
+            f"of the untraced runtime")
+        assert r["on_overhead_frac"] <= MAX_ON_FRAC, (
+            f"{r['cell']}: enabled tracing costs "
+            f"{r['on_overhead_frac'] * 100:.1f}% > "
+            f"{MAX_ON_FRAC * 100:.0f}% of the untraced runtime")
+    worst_off = max(r["off_overhead_frac"] for r in rows)
+    worst_on = max(r["on_overhead_frac"] for r in rows)
+    print(f"check ok: tracing-off <= {MAX_OFF_FRAC * 100:.0f}% "
+          f"(worst {worst_off * 100:.4f}%), tracing-on <= "
+          f"{MAX_ON_FRAC * 100:.0f}% (worst {worst_on * 100:.2f}%)")
+
+
+def main(argv=None) -> List[Dict]:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--repeats", type=int, default=7)
+    ap.add_argument("--duration", type=float, default=300.0,
+                    help="sim cell virtual duration (ms)")
+    ap.add_argument("--pods", type=int, default=4)
+    ap.add_argument("--sessions", type=int, default=64)
+    ap.add_argument("--steps", type=int, default=40)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI scale: 2 pods, 8 sessions, 10 steps, 120ms sim")
+    ap.add_argument("--check", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+    if args.smoke:
+        args.pods, args.sessions, args.steps = 2, 8, 10
+        args.duration, args.repeats = 120.0, 3
+
+    print("cell,t_off,t_on,events,off_overhead,on_overhead")
+    rows = [
+        run_cell("serve", lambda trace: _serve_run(
+            trace=trace, pods=args.pods, sessions=args.sessions,
+            steps=args.steps, seed=args.seed), args.repeats),
+        run_cell("sim", lambda trace: _sim_run(
+            trace=trace, duration=args.duration, seed=args.seed),
+            args.repeats),
+    ]
+    if args.check:
+        check(rows)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump({"bench": "obs_overhead", "rows": rows}, f, indent=1)
+        print(f"wrote {args.out}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -635,16 +635,38 @@ def _main_replay(argv: List[str]) -> int:
         prog="repro-explore replay",
         description="Deterministically re-run a counterexample trace.")
     ap.add_argument("trace", help="trace JSON emitted by the explorer")
+    ap.add_argument("--trace-out", "--trace", dest="trace_out", default=None,
+                    metavar="OUT.json",
+                    help="also export a repro.obs timeline of the replay "
+                         "(Perfetto trace_event JSON): per-delivery "
+                         "dispatch instants on per-node tracks, so the "
+                         "minimized counterexample is visually "
+                         "inspectable")
     ns = ap.parse_args(argv)
     from repro.analysis.scenarios import get_scenario
 
     trace = load_trace(ns.trace)
     build = get_scenario(trace.model)
+    rec = None
+    if ns.trace_out:
+        # installed module-wide so the scenario's EventQueue (constructed
+        # inside replay_trace) captures it at construction
+        from repro.obs import trace as obs_trace
+
+        rec = obs_trace.TraceRecorder()
+        obs_trace.install(rec)
     try:
         vio = replay_trace(lambda pol: build(dict(trace.args), pol), trace)
     except ReplayDivergence as e:
         print(f"replay DIVERGED: {e}")
         return 2
+    finally:
+        if rec is not None:
+            from repro.obs import trace as obs_trace
+
+            obs_trace.uninstall()
+            rec.export(ns.trace_out)
+            print(f"timeline: {len(rec)} events -> {ns.trace_out}")
     want = trace.violation
     if vio is None and want is None:
         print("replay clean (trace recorded no violation)")

@@ -2,7 +2,7 @@
 from __future__ import annotations
 
 from . import (event_determinism, host_sync, id_dtype, jit_static, ops_ref,
-               pow2_pad, state_mut)
+               pow2_pad, state_mut, trace_site)
 
 ALL_RULES = [
     host_sync.RULE,
@@ -12,4 +12,5 @@ ALL_RULES = [
     jit_static.RULE,
     pow2_pad.RULE,
     event_determinism.RULE,
+    trace_site.RULE,
 ]

@@ -173,6 +173,14 @@ class SimConfig:
     # explored schedule and swaps in its recording policy through this
     # field.  None (default): the plain (time, seq) heap order.
     explore: Optional["ExploreConfig"] = None  # noqa: F821 (repro.analysis)
+    # Structured tracing (repro.obs): record lease rounds, forwards,
+    # aborts, certify batches, and planner epochs as sim-time-stamped
+    # spans/instants on per-node tracks, exportable to Perfetto via
+    # ``Cluster.trace.export(path)``.  Stamps come from the event queue's
+    # virtual clock, so a traced run is byte-identical to an untraced one
+    # (asserted in tests/test_obs.py) and two seeded runs export
+    # byte-identical JSON.
+    trace: bool = False
 
 
 @dataclass
@@ -276,6 +284,12 @@ class Cluster:
         self.workload = workload
         policy = None if cfg.explore is None else cfg.explore.policy
         self.events = EventQueue(policy=policy)
+        # repro.obs recorder (None when off: every site is one dead branch)
+        self.trace = None
+        if cfg.trace:
+            from repro.obs.trace import TraceRecorder
+
+            self.trace = TraceRecorder()
         self.gcs = SimGCS(self.events, cfg.n_nodes, cfg.latency)
         self.ccmap = ccmap or ConflictClassMap(
             cfg.n_classes, stride=max(1, cfg.n_items // cfg.n_classes)
@@ -437,6 +451,13 @@ class Cluster:
             self.gcs.oa_broadcast(mv.dst, ("lease", req))
             executed.append(mv)
         self.planner.committed(executed)
+        tr = self.trace
+        if tr is not None:
+            tr.span("plan-epoch", "plan", self.events.now, 0.0,
+                    moves=len(executed))
+            for mv in executed:
+                tr.instant("plan-prefetch", "plan", ts=self.events.now,
+                           cc=mv.cc, dst=mv.dst)
 
     # -- CPU slots -------------------------------------------------------------
     def _request_slot(self, node: int, fn: Callable[[], None]) -> None:
@@ -541,11 +562,15 @@ class Cluster:
         txn.early = True
         txn.exec_node = node
         self._inflight[txn.txid] = txn
+        tr = self.trace
         lors = r.lm.try_piggyback(txn.ccs)
         if lors is not None:
             txn.reused = True
             self.metrics.piggybacks += 1
             txn.lors = lors
+            if tr is not None:
+                tr.instant("lease-piggyback", f"node{node}/lease",
+                           ts=self.events.now, txid=txn.txid)
             return
         req = LeaseRequest(
             req_id=next(self._reqid),
@@ -556,6 +581,11 @@ class Cluster:
         r.lm.n_requests += 1
         self.metrics.lease_requests += 1
         r.pending_reqs[req.req_id] = txn
+        if tr is not None:
+            # closed by _on_to when the TO-delivery grants the LORs; async
+            # span because rounds from the node's threads overlap freely
+            tr.abegin("lease-round", f"node{node}/lease", req.req_id,
+                      ts=self.events.now, txid=txn.txid, ccs=len(req.ccs))
         self.gcs.oa_broadcast(node, ("lease", req))
 
     def _exec_done(self, txn: SimTxn, node: int) -> None:
@@ -564,6 +594,10 @@ class Cluster:
         txn.result = txn.spec.execute(r.store, txn.stm)
         self._release_slot(node)
         txn.exec_done = True
+        tr = self.trace
+        if tr is not None:
+            tr.span("exec", f"node{node}/t{txn.thread}", txn.t_start,
+                    self.events.now - txn.t_start, txid=txn.txid)
         if txn.spec.read_only:
             self.events.schedule(
                 self.cfg.local_commit_ms, lambda: self._txn_done(txn, committed=True)
@@ -594,6 +628,10 @@ class Cluster:
         if target != node and self.gcs.alive(target) and self.cfg.forward.may_forward(txn.forwards):
             txn.forwards += 1
             self.metrics.forwards += 1
+            tr = self.trace
+            if tr is not None:
+                tr.instant("forward", f"node{node}/dtd", ts=self.events.now,
+                           txid=txn.txid, target=target)
             if self.planner is not None:
                 # the planner's target signal: work shipped away from origin
                 self.planner.affinity.record_forward(
@@ -617,11 +655,15 @@ class Cluster:
         txn.exec_node = node
         r = self.replicas[node]
         self.metrics.rw_certified += 1
+        tr = self.trace
         lors = r.lm.try_piggyback(txn.ccs)
         if lors is not None:
             txn.reused = True
             self.metrics.piggybacks += 1
             txn.lors = lors
+            if tr is not None:
+                tr.instant("lease-piggyback", f"node{node}/lease",
+                           ts=self.events.now, txid=txn.txid)
             self._wait_enabled(txn, node)
         else:
             req = LeaseRequest(
@@ -633,6 +675,10 @@ class Cluster:
             r.lm.n_requests += 1
             self.metrics.lease_requests += 1
             r.pending_reqs[req.req_id] = txn
+            if tr is not None:
+                tr.abegin("lease-round", f"node{node}/lease", req.req_id,
+                          ts=self.events.now, txid=txn.txid,
+                          ccs=len(req.ccs))
             self.gcs.oa_broadcast(node, ("lease", req))
 
     def _wait_enabled(self, txn: SimTxn, node: int) -> None:
@@ -812,6 +858,11 @@ class Cluster:
             r.store.apply_batch(
                 [t.stm.write_set for t in committers],
                 [t.txid for t in committers])
+        tr = self.trace
+        if tr is not None:
+            tr.span("certify-batch", f"node{node}/cert", self.events.now,
+                    0.0, batch=len(batch),
+                    aborts=len(batch) - len(committers))
         for t, good in zip(batch, verdicts):
             if good:
                 self._commit_applied(t, node)
@@ -829,6 +880,10 @@ class Cluster:
     def _certify_failed(self, txn: SimTxn, node: int) -> None:
         r = self.replicas[node]
         self.metrics.aborts += 1
+        tr = self.trace
+        if tr is not None:
+            tr.instant("abort", f"node{node}/dtd", ts=self.events.now,
+                       txid=txn.txid)
         if self.planner is not None:
             # contention at the executing node damps its affinity
             self.planner.affinity.record_abort(self.events.now, node, txn.ccs)
@@ -860,6 +915,10 @@ class Cluster:
         txn.stm = Transaction(txid=txn.txid, origin=txn.origin)
         txn.result = txn.spec.execute(r.store, txn.stm)
         self._release_slot(node)
+        tr = self.trace
+        if tr is not None:
+            tr.span("reexec", f"node{node}/t{txn.thread}", self.events.now,
+                    0.0, txid=txn.txid, n=txn.reexecs)
         if self.cfg.certify_mode == "batched":
             self._enqueue_certify(txn, node)
         else:
@@ -958,6 +1017,10 @@ class Cluster:
                 txn = r.pending_reqs.pop(req.req_id, None)
                 if txn is not None:
                     txn.lors = lors
+                    tr = self.trace
+                    if tr is not None:
+                        tr.aend("lease-round", f"node{node}/lease",
+                                req.req_id, ts=self.events.now)
                     if txn.exec_done:
                         self._wait_enabled(txn, node)
                     # else: pipelined handoff — the lease round finished
@@ -969,6 +1032,11 @@ class Cluster:
         r = self.replicas[node]
         if kind == "freed":
             r.lm.on_ur_deliver_freed(payload)
+            tr = self.trace
+            if tr is not None and node == sender:
+                # once per broadcast (at the freeing node), not per replica
+                tr.instant("lease-free", f"node{node}/lease",
+                           ts=self.events.now, n=len(payload))
             self._check_waiters(node)
         elif kind == "commit":
             c = payload

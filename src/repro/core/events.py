@@ -22,6 +22,8 @@ import itertools
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, FrozenSet, List, Optional, Set, Tuple
 
+from repro.obs import trace as obs_trace
+
 
 @dataclass(frozen=True)
 class EvMeta:
@@ -115,6 +117,12 @@ class EventQueue:
         self.now: float = 0.0
         self.n_dispatched: int = 0
         self.policy = policy
+        # queue-level dispatch tracing rides the module-level recorder,
+        # captured once at construction: `repro-explore replay --trace`
+        # installs it before building the scenario, so counterexample
+        # replays get per-delivery timelines while ordinary runs keep a
+        # None here (one dead branch per dispatch, nothing else)
+        self.trace = obs_trace.TRACE if obs_trace.TRACE.enabled else None
 
     def schedule(self, delay: float, fn: Callable[[], None],
                  meta: Optional[EvMeta] = None) -> _Event:
@@ -145,6 +153,12 @@ class EventQueue:
                 if ev is None:
                     continue
                 policy.on_dispatch(ev)
+            tr = self.trace
+            if tr is not None and ev.meta is not None:
+                m = ev.meta
+                tr.instant("dispatch", f"node{m.node}/gcs" if m.node >= 0
+                           else "events", ts=ev.time, kind=m.kind,
+                           label=m.label)
             ev.fn()
             self.n_dispatched += 1
             n += 1

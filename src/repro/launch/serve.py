@@ -47,7 +47,21 @@ def main(argv=None) -> dict:
                          "affinity-scored lease prefetch + session re-homes "
                          "off the critical path")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="record a repro.obs timeline of the run (routing, "
+                         "lease acquires, certify batches, decode spans, "
+                         "planner epochs, MoE dispatch verdicts) and export "
+                         "Perfetto trace_event JSON here")
     args = ap.parse_args(argv)
+
+    recorder = None
+    if args.trace:
+        from repro.obs import trace as obs_trace
+
+        recorder = obs_trace.TraceRecorder()
+        # installed module-wide too, so jit-trace-time sites with no engine
+        # to thread through (models/moe.py) land in the same timeline
+        obs_trace.install(recorder)
 
     cfg = (get_smoke_config(args.arch) if args.preset == "smoke"
            else get_config(args.arch))
@@ -86,7 +100,8 @@ def main(argv=None) -> dict:
         planner = PlacementPlanner.for_serving(
             args.pods, args.sessions, epoch_ms=args.plan_epoch_ms,
             mesh=make_plan_mesh())
-    eng = MultiPodEngine(args.pods, backend, router, planner=planner)
+    eng = MultiPodEngine(args.pods, backend, router, planner=planner,
+                         trace=recorder)
     rng = np.random.default_rng(args.seed)
     submitted = 0
     while submitted < args.requests:
@@ -112,6 +127,14 @@ def main(argv=None) -> dict:
               f"planned={m['plan_GB']:.4f}GB")
     if args.backend == "sim":
         print(f"simulated throughput: {m['tokens_per_s']:.0f} tok/s")
+    print(f"token latency: p50={m['token_lat_p50_s']:.4g}s "
+          f"p99={m['token_lat_p99_s']:.4g}s")
+    if recorder is not None:
+        from repro.obs import trace as obs_trace
+
+        obs_trace.uninstall()
+        recorder.export(args.trace)
+        print(f"trace: {len(recorder)} events -> {args.trace}")
     return m
 
 

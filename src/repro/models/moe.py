@@ -38,6 +38,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.obs import trace as obs_trace
 from .common import ModelConfig, chunk_plan, mlp_apply
 
 
@@ -490,11 +491,21 @@ def moe_apply(
     (ragged batches are padded and masked), so the forced path is taken
     verbatim.
     """
+    # the dispatch-verdict span fires at jit-trace time — one event per
+    # compiled (shape, path) cell, stamped at the recorder's last set_time;
+    # this is exactly when the verdict is decided, so the trace records
+    # which path each compilation cell took (the module-level recorder is
+    # used because the layer has no engine/cluster to thread one through)
+    tr = obs_trace.TRACE
     if mesh is None or mesh.shape.get("model", 1) == 1:
+        if tr.enabled:
+            tr.span("moe-dispatch", "moe", tr.time, 0.0, path="ref",
+                    tokens=int(x.shape[0] * x.shape[1]))
         return moe_ref(p, x, cfg)
     if dispatch not in ("auto", "a2a", "replicate"):
         raise ValueError(f"unknown moe dispatch {dispatch!r}")
     use_a2a = False
+    ep = tp = 0
     if dispatch != "replicate":
         b, s, _ = x.shape
         batch_axes = tuple(kw.get("batch_axes", ("data",)))
@@ -504,6 +515,10 @@ def moe_apply(
         use_a2a = (
             dispatch == "a2a"
             or dispatch_verdict(cfg, t_pad // shards, ep, tp))
+    if tr.enabled:
+        tr.span("moe-dispatch", "moe", tr.time, 0.0,
+                path="a2a" if use_a2a else "replicate",
+                tokens=int(x.shape[0] * x.shape[1]), ep=ep, tp=tp)
     if use_a2a:
         return moe_sharded_a2a(p, x, cfg, mesh, **kw)
     return moe_sharded(p, x, cfg, mesh, **kw)

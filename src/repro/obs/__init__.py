@@ -1,0 +1,26 @@
+"""repro.obs — deterministic tracing + quantile metrics.
+
+- :mod:`repro.obs.trace`: span/instant recorder stamped in sim time,
+  Perfetto ``trace_event`` JSON export, module-level ``TRACE`` no-op
+  singleton for siteless call points.
+- :mod:`repro.obs.metrics`: counters / gauges / exact-quantile
+  histograms behind a registry, the ``MetricSet`` attribute facade,
+  and the ``MonotonicSampler`` wall-clock seam.
+- :mod:`repro.obs.cli`: the ``repro-trace`` console script
+  (export / summarize / diff).
+"""
+from repro.obs.trace import (  # noqa: F401
+    NULL,
+    NullRecorder,
+    TraceRecorder,
+    install,
+    uninstall,
+)
+from repro.obs.metrics import (  # noqa: F401
+    Counter,
+    Gauge,
+    Histogram,
+    MetricSet,
+    MonotonicSampler,
+    Registry,
+)

@@ -18,13 +18,13 @@ gather/compare bytes), replacing any per-request certification constant.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
 from typing import Dict, List, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.stm import Transaction, VersionedStore
 from repro.dist.locality import HBM_BW
+from repro.obs.metrics import MetricSet
 
 # fixed per-batch cost: kernel dispatch + result sync
 CERT_DISPATCH_S = 20e-6
@@ -33,13 +33,16 @@ CERT_DISPATCH_S = 20e-6
 CERT_BYTES_PER_SLOT = 12.0
 
 
-@dataclass
-class CertifierMetrics:
-    batches: int = 0
-    certified: int = 0
-    aborts: int = 0
-    time_s: float = 0.0
-    max_batch: int = 0
+class CertifierMetrics(MetricSet):
+    """Certification counters on the repro.obs registry.
+
+    Attribute reads/writes (``m.batches += 1``) route to registry
+    counters via the MetricSet facade; ``as_dict`` keeps the exact key
+    set the engine has always merged into its own dict.
+    """
+
+    FIELDS = {"batches": 0, "certified": 0, "aborts": 0,
+              "time_s": 0.0, "max_batch": 0}
 
     def as_dict(self) -> Dict[str, float]:
         return {

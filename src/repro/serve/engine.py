@@ -27,7 +27,6 @@ The router's constraint-(3) panic-acquire is disabled in this mode
 from __future__ import annotations
 
 import dataclasses
-import time
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -35,6 +34,8 @@ import numpy as np
 
 from repro.dist.locality import DCN_RTT_S, price_session_dispatch
 from repro.launch.hlo_analysis import HBM_BW
+from repro.obs.metrics import MetricSet, MonotonicSampler
+from repro.obs.trace import TraceRecorder
 from .certifier import StepCertifier
 from .router import LocalityRouter, RouteDecision
 
@@ -161,28 +162,68 @@ class RealBackend:
 # Engine
 # ---------------------------------------------------------------------------
 
-@dataclass
-class EngineMetrics:
-    steps: int = 0
-    tokens: int = 0
-    sim_time_s: float = 0.0
-    wire_bytes: float = 0.0
-    transfers: int = 0
-    forwards: int = 0
-    local: int = 0
-    plan_epochs: int = 0         # planner invocations
-    plan_moves: int = 0          # planned session re-homes executed
-    plan_prefetches: int = 0     # planned zero-byte lease prefetches
-    plan_bytes: float = 0.0      # state shipped by planned moves
-    plan_block_s: float = 0.0    # host wall-time planning spent ON the token
-    # path (begin dispatch + finish harvest; sync mode pays the full
-    # scoring wait here, async mode only the dispatch + a drained harvest)
-    # certification counters live in the StepCertifier (single source of
-    # truth); as_dict merges them when the engine links it here
-    cert: Optional[object] = None
+class EngineMetrics(MetricSet):
+    """Fleet counters + per-pod breakdown + token-latency histograms,
+    all on one repro.obs registry.
 
-    def as_dict(self) -> Dict[str, float]:
-        out = {
+    Attribute access (``m.forwards += 1``) keeps working via the
+    MetricSet facade; the registry additionally carries per-pod
+    ``pod{p}.forwards/local/wire_bytes`` counters and per-pod
+    ``pod{p}.token_lat_s`` histograms (plus the fleet-wide one), which
+    ``as_dict`` surfaces as p50/p90/p99 and a ``per_pod`` table — the
+    attribution the ROADMAP's SLO-gated trace benchmark reads.
+    """
+
+    FIELDS = {
+        "steps": 0, "tokens": 0, "sim_time_s": 0.0, "wire_bytes": 0.0,
+        "transfers": 0, "forwards": 0, "local": 0,
+        "plan_epochs": 0,        # planner invocations
+        "plan_moves": 0,         # planned session re-homes executed
+        "plan_prefetches": 0,    # planned zero-byte lease prefetches
+        "plan_bytes": 0.0,       # state shipped by planned moves
+        "plan_block_s": 0.0,     # host wall-time planning spent ON the token
+        # path (begin dispatch + finish harvest; sync mode pays the full
+        # scoring wait here, async mode only the dispatch + a drained
+        # harvest) — sampled through obs.metrics.MonotonicSampler, the one
+        # sanctioned wall-clock seam
+    }
+
+    def __init__(self, n_pods: int = 0, cert: Optional[object] = None,
+                 registry=None) -> None:
+        super().__init__(registry)
+        # certification counters live in the StepCertifier (single source
+        # of truth); as_dict merges them when the engine links it here
+        self.cert = cert
+        self.n_pods = n_pods
+        reg = self.registry
+        for p in range(n_pods):
+            reg.counter(f"pod{p}.forwards")
+            reg.counter(f"pod{p}.local")
+            reg.counter(f"pod{p}.wire_bytes", 0.0)
+            reg.histogram(f"pod{p}.token_lat_s")
+        reg.histogram("token_lat_s")
+
+    # -- per-pod attribution -------------------------------------------------
+    def pod_add(self, pod: int, name: str, n=1) -> None:
+        self.registry.counter(f"pod{pod}.{name}").value += n
+
+    def observe_token_latency(self, pod: int, lat_s: float,
+                              n: int = 1) -> None:
+        """Record ``n`` tokens decoded at ``pod`` whose step latency was
+        ``lat_s`` (the pod's full busy time for that step: wire + certify
+        + decode — what a request experiences per token)."""
+        self.registry.histogram("token_lat_s").observe(lat_s, n)
+        if 0 <= pod < self.n_pods:
+            self.registry.histogram(f"pod{pod}.token_lat_s").observe(
+                lat_s, n)
+
+    def token_latency(self, pod: Optional[int] = None):
+        """The (per-pod) token-latency histogram, for quantile/SLO reads."""
+        name = "token_lat_s" if pod is None else f"pod{pod}.token_lat_s"
+        return self.registry.histogram(name)
+
+    def as_dict(self) -> Dict[str, Any]:
+        out: Dict[str, Any] = {
             "steps": self.steps, "tokens": self.tokens,
             "sim_time_s": self.sim_time_s,
             "tokens_per_s": self.tokens / max(1e-9, self.sim_time_s),
@@ -194,6 +235,23 @@ class EngineMetrics:
             "plan_GB": self.plan_bytes / 1e9,
             "plan_block_s": self.plan_block_s,
         }
+        reg = self.registry
+        fleet = reg.histogram("token_lat_s")
+        for label, q in (("p50", 0.5), ("p90", 0.9), ("p99", 0.99)):
+            v = fleet.quantile(q)
+            out[f"token_lat_{label}_s"] = 0.0 if v is None else v
+        per_pod: Dict[int, Dict[str, Any]] = {}
+        for p in range(self.n_pods):
+            h = reg.histogram(f"pod{p}.token_lat_s")
+            p50, p99 = h.quantile(0.5), h.quantile(0.99)
+            per_pod[p] = {
+                "forwards": reg.counter(f"pod{p}.forwards").value,
+                "local": reg.counter(f"pod{p}.local").value,
+                "wire_GB": reg.counter(f"pod{p}.wire_bytes").value / 1e9,
+                "token_lat_p50_s": 0.0 if p50 is None else p50,
+                "token_lat_p99_s": 0.0 if p99 is None else p99,
+            }
+        out["per_pod"] = per_pod
         if self.cert is not None:
             out.update(self.cert.as_dict())
         return out
@@ -203,10 +261,22 @@ class MultiPodEngine:
     def __init__(self, n_pods: int, backend, router: LocalityRouter,
                  certifier: Optional[StepCertifier] = None,
                  planner=None, sanitize: bool = False,
-                 plan_async: bool = True) -> None:
+                 plan_async: bool = True, trace=None) -> None:
         self.n_pods = n_pods
         self.backend = backend
         self.router = router
+        # repro.obs tracing: pass a TraceRecorder (or True for a fresh
+        # one); None/False keeps every site a single dead branch.  Spans
+        # are stamped from the deterministic pod busy clocks / router
+        # tick clock, so traced and untraced runs are byte-identical.
+        if trace is True:
+            trace = TraceRecorder()
+        elif trace is False:
+            trace = None
+        self.trace = trace
+        # the sanctioned wall-clock seam for plan_block_s (host scoring
+        # time is genuinely wall time; everything else here is simulated)
+        self._mono = MonotonicSampler()
         # forwarded requests are certified at the owning pod in one batch
         # per engine step (the paper's commit phase at the lease owner)
         self.certifier = certifier or StepCertifier(n_pods, sanitize=sanitize)
@@ -237,7 +307,8 @@ class MultiPodEngine:
         # per-pod busy clocks: pods decode independently (no cross-pod
         # barrier), so simulated wall time is the busiest pod's clock
         self._pod_clock = np.zeros((n_pods,), np.float64)
-        self.metrics = EngineMetrics(cert=self.certifier.metrics)
+        self.metrics = EngineMetrics(n_pods=n_pods,
+                                     cert=self.certifier.metrics)
 
     def submit(self, req: Request) -> RouteDecision:
         m = self.metrics
@@ -263,8 +334,23 @@ class MultiPodEngine:
                 m.transfers += 1
         elif dec.action == "forward":
             m.forwards += 1
+            m.pod_add(dec.target, "forwards")
         else:
             m.local += 1
+            m.pod_add(dec.target, "local")
+        tr = self.trace
+        if tr is not None:
+            if dec.action == "acquire":
+                # the lease/ownership round + state landing, priced as
+                # wire_s; rendered on the acquiring pod's lease track
+                tr.span("lease-acquire", f"pod{dec.target}/lease",
+                        self.router._now, 1e3 * dec.wire_s, sid=req.sid)
+            elif dec.action == "forward":
+                tr.instant("route-forward", "router", ts=self.router._now,
+                           sid=req.sid, target=dec.target)
+            else:
+                tr.instant("route-local", "router", ts=self.router._now,
+                           sid=req.sid, target=dec.target)
         # the ownership round stamps the session's lease epoch at every
         # pod (idempotent when ownership didn't move): forwards still in
         # flight with an older epoch fail certification and re-route
@@ -278,6 +364,8 @@ class MultiPodEngine:
         else:
             self.queues[dec.target].append(req)
         m.wire_bytes += dec.wire_bytes
+        if dec.wire_bytes > 0:
+            m.pod_add(dec.target, "wire_bytes", dec.wire_bytes)
         if dec.wire_s > 0:
             # receiver waits out the RTT; byte serialization occupies the
             # NIC at both endpoints of the transfer
@@ -333,12 +421,15 @@ class MultiPodEngine:
             self._harvest_plan_epoch(pending)
         step_t = 0.0
         for pod in range(self.n_pods):
+            t_base_ms = 1e3 * float(self._pod_clock[pod])
             # inbound KV/requests must land before the pod decodes them
-            pod_t = self._wire_time_s(pod)
+            t_wire = self._wire_time_s(pod)
+            pod_t = t_wire
             # certify the step's forwarded batch in one validate dispatch;
             # its time lands on the pod's busy clock (scaling with the
             # batch, not a per-request constant)
             passed, aborted, t_cert = self.certifier.drain(pod)
+            n_cert = len(passed) + len(aborted)
             pod_t += t_cert
             self.queues[pod].extend(passed)
             for r in aborted:
@@ -352,6 +443,8 @@ class MultiPodEngine:
                         self.router._now, pod, (r.sid,))
                 self.submit(r)
             reqs = self.queues[pod]
+            t_dec = 0.0
+            n_dec = 0
             if reqs:
                 sids = []
                 for r in reqs:
@@ -359,8 +452,9 @@ class MultiPodEngine:
                         sids.append(r.sid)
                 sids = list(dict.fromkeys(sids))
                 if hasattr(self.backend, "decode_time_s"):
-                    pod_t += self.backend.decode_time_s(
+                    t_dec = self.backend.decode_time_s(
                         pod, sids, self.router.kv_bytes_per_token)
+                    pod_t += t_dec
                 self.backend.step(pod, sids)
                 for r in reqs:
                     r.n_tokens -= 1
@@ -371,7 +465,26 @@ class MultiPodEngine:
                 for sid in sids:
                     self.session_len[sid] = self.session_len.get(sid, 0) + 1
                     m.tokens += 1
+                n_dec = len(sids)
+                # per-token latency at this pod this step: the busy time a
+                # decoded token just experienced (wire + certify + decode)
+                if pod_t > 0:
+                    m.observe_token_latency(pod, pod_t, n_dec)
                 self.queues[pod] = [r for r in reqs if r.n_tokens > 0]
+            tr = self.trace
+            if tr is not None:
+                # the pod's step timeline: wire landing, certify batch,
+                # decode — laid back-to-back on the pod's busy clock
+                if t_wire > 0:
+                    tr.span("wire", f"pod{pod}", t_base_ms, 1e3 * t_wire)
+                if t_cert > 0:
+                    tr.span("certify", f"pod{pod}",
+                            t_base_ms + 1e3 * t_wire, 1e3 * t_cert,
+                            batch=n_cert, aborts=len(aborted))
+                if t_dec > 0:
+                    tr.span("decode", f"pod{pod}",
+                            t_base_ms + 1e3 * (t_wire + t_cert),
+                            1e3 * t_dec, sessions=n_dec)
             self._pod_clock[pod] += pod_t
             step_t = max(step_t, pod_t)
         # pods run in parallel with no cross-pod barrier: simulated wall
@@ -405,7 +518,7 @@ class MultiPodEngine:
         a plan mesh) without waiting on it."""
         from repro.plan.score import price_move_costs
 
-        t0 = time.perf_counter()
+        self._mono.mark()
         r = self.router
         self.metrics.plan_epochs += 1
         n_cls = r.affinity.node.n_cols
@@ -420,7 +533,14 @@ class MultiPodEngine:
             state, work, seq_shards=r.seq_shards)
         pending = self.planner.begin(r._now, owner, state, fwd_cost,
                                      move_cost, r.cpu)
-        self.metrics.plan_block_s += time.perf_counter() - t0
+        self.metrics.plan_block_s += self._mono.lap()
+        tr = self.trace
+        if tr is not None:
+            # async epoch: opened at the kick, closed at the harvest — the
+            # PR 9 scoring/decode overlap shows up as this span bracketing
+            # the next step's pod spans
+            tr.abegin("plan-epoch", "plan", pending.epoch, ts=r._now,
+                      classes=int(n_cls))
         return pending
 
     def _harvest_plan_epoch(self, pending) -> None:
@@ -429,15 +549,19 @@ class MultiPodEngine:
         a session acquired away (or evicted) since the kick keeps its
         snapshot move from firing."""
         r = self.router
-        t0 = time.perf_counter()
+        self._mono.mark()
         plan = self.planner.finish(pending)
-        self.metrics.plan_block_s += time.perf_counter() - t0
+        self.metrics.plan_block_s += self._mono.lap()
         executed = []
         for mv in plan.moves:
             if r.owner.get(mv.cc) == mv.src and mv.src != mv.dst:
                 self._execute_move(mv.cc, mv.dst)
                 executed.append(mv)
         self.planner.committed(executed)
+        tr = self.trace
+        if tr is not None:
+            tr.aend("plan-epoch", "plan", pending.epoch, ts=r._now,
+                    moves=len(executed))
 
     def _execute_move(self, sid: int, dst: int) -> None:
         """Planned lease prefetch / session re-home.
@@ -454,11 +578,15 @@ class MultiPodEngine:
         length = self.session_len.get(sid, 0)
         shipped = self._move_session_state(sid, src, dst, length) \
             if src != dst else 0.0
+        tr = self.trace
         if shipped > 0:
             m.plan_moves += 1
             m.transfers += 1
             m.wire_bytes += shipped
             m.plan_bytes += shipped
+            m.pod_add(dst, "wire_bytes", shipped)
+            if tr is not None:
+                tr.instant("plan-move", "plan", ts=r._now, sid=sid, dst=dst)
             priced = price_session_dispatch(
                 0.0, 0.0, shipped, handoff_bytes=0.0,
                 seq_shards=getattr(self.backend, "seq_shards", r.seq_shards))
@@ -472,6 +600,9 @@ class MultiPodEngine:
                 self._pending_wire[src].append((0.0, serial))
         else:
             m.plan_prefetches += 1
+            if tr is not None:
+                tr.instant("plan-prefetch", "plan", ts=r._now, sid=sid,
+                           dst=dst)
 
     def evict_session(self, sid: int) -> None:
         """Retire a finished session everywhere it has state.

@@ -9,7 +9,7 @@ import pytest
 from repro.analysis import lint as L
 from repro.analysis.rules import (ALL_RULES, event_determinism, host_sync,
                                   id_dtype, jit_static, ops_ref, pow2_pad,
-                                  state_mut)
+                                  state_mut, trace_site)
 
 REPO = Path(__file__).resolve().parents[1]
 
@@ -243,6 +243,37 @@ def test_event_determinism_quiet_on_core_modules():
         ctx = L.FileCtx(REPO / rel, rel, src, L.Project())
         vs = L.apply_allows(ctx, event_determinism.RULE.check(ctx))
         assert vs == [], "\n".join(v.render() for v in vs)
+
+
+# ---------------------------------------------------------------------------
+# event-trace-site
+# ---------------------------------------------------------------------------
+
+def test_trace_site_flags_computed_event_names():
+    _, vs = _rules("""
+        def f(self, node, kind):
+            tr = self.trace
+            if tr is not None:
+                tr.instant(f"dispatch-{kind}", "events", ts=1.0)
+                tr.span("exec" if kind else "x", "t", 0.0, 1.0)
+                self.trace.counter(kind, "t", 0.0, 1)
+    """, trace_site.RULE)
+    assert len(vs) == 3
+    assert all(v.rule == "event-trace-site" for v in vs)
+    assert "f-string" in vs[0].msg
+
+
+def test_trace_site_quiet_on_literal_names_and_other_receivers():
+    _, vs = _rules("""
+        def f(self, node, txid):
+            tr = self.trace
+            if tr is not None:
+                tr.instant("forward", f"node{node}/dtd", ts=1.0, txid=txid)
+                tr.span("exec", f"node{node}/t0", 0.0, 1.0)
+            self.stats.counter(txid)        # not a trace receiver
+            span = make_span(txid)          # bare name, not a method call
+    """, trace_site.RULE)
+    assert vs == []
 
 
 # ---------------------------------------------------------------------------
